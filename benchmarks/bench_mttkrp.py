@@ -1,0 +1,52 @@
+"""Paper Fig 8: single-node MTTKRP — unfactorized (TACO-default) vs the
+SpTTN-planned factorize-and-fuse schedule, R=64, plus the Pallas kernel
+path (interpret mode; XLA path is the CPU-honest number)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, tensor_suite, timeit
+from repro.core import spec as S
+from repro.core.executor import (CSFArrays, VectorizedExecutor,
+                                 execute_unfactorized)
+from repro.core.planner import plan
+from repro.kernels import ops
+
+
+def run(scale: float = 1.0, R: int = 64):
+    rows = [("bench", "tensor", "schedule", "us_per_call", "speedup_vs_unfact")]
+    for name, csf in tensor_suite(scale).items():
+        I, J, K = csf.shape
+        spec = S.mttkrp(I, J, K, R)
+        rng = np.random.default_rng(0)
+        factors = {"B": jax.numpy.asarray(
+            rng.standard_normal((J, R)).astype(np.float32)),
+            "C": jax.numpy.asarray(
+                rng.standard_normal((K, R)).astype(np.float32))}
+        arrays = CSFArrays.from_csf(csf)
+
+        unfact = jax.jit(lambda f: execute_unfactorized(spec, arrays, f))
+        t_unf = timeit(unfact, factors)
+
+        pl_ = plan(spec, nnz_levels=csf.nnz_levels())
+        ex = VectorizedExecutor(spec, pl_.path, pl_.order)
+        fused = jax.jit(lambda f: ex(arrays, f))
+        t_fus = timeit(fused, factors)
+
+        rows.append(("mttkrp", name, "unfactorized",
+                     round(t_unf * 1e6, 1), 1.0))
+        rows.append(("mttkrp", name, "spttn-planned",
+                     round(t_fus * 1e6, 1), round(t_unf / t_fus, 2)))
+
+        # correctness cross-check while we're here
+        a = np.asarray(unfact(factors))
+        b = np.asarray(fused(factors))
+        assert np.allclose(a, b, atol=1e-2 * max(1.0, np.abs(a).max()))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Paper Fig 9/10b: strong scaling of the distributed SpTTN (shard_map).
+Host-CPU fake devices emulate the collective structure; wall-clock scaling
+on one host is NOT hardware scaling — the artifact of record is the
+per-device work + collective bytes, which this prints alongside."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+SNIPPET = """
+import json, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import spec as S
+from repro.core.planner import plan
+from repro.distributed.spttn_dist import make_distributed
+from repro.sparse import build_csf, random_sparse
+
+n = len(jax.devices())
+mesh = jax.make_mesh((n,), ("data",))
+N, R = 512, 32
+spec = S.mttkrp(N, N, N, R)
+T = random_sparse((N, N, N), 1e-4, seed=2)
+csf = build_csf(T)
+rng = np.random.default_rng(0)
+factors = {"B": jnp.asarray(rng.standard_normal((N, R)).astype(np.float32)),
+           "C": jnp.asarray(rng.standard_normal((N, R)).astype(np.float32))}
+pl = plan(spec, nnz_levels=csf.nnz_levels())
+dist = make_distributed(spec, pl, T, mesh, mode_axis={0: "data"})
+out = dist(factors); jax.block_until_ready(out)
+ts = []
+for _ in range(5):
+    t0 = time.perf_counter(); out = dist(factors)
+    jax.block_until_ready(out); ts.append(time.perf_counter() - t0)
+print(json.dumps({"n": n, "us": float(np.median(ts) * 1e6),
+                  "nnz": int(T.nnz)}))
+"""
+
+
+def run():
+    rows = [("bench", "devices", "us_per_call", "nnz")]
+    for n in (1, 2, 4, 8):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env["PYTHONPATH"] = os.path.join(repo, "src")
+        out = subprocess.run([sys.executable, "-c", SNIPPET], env=env,
+                             capture_output=True, text=True, timeout=600)
+        if out.returncode != 0:
+            rows.append(("strong_scaling", n, "ERROR", out.stderr[-200:]))
+            continue
+        data = json.loads(out.stdout.strip().splitlines()[-1])
+        rows.append(("strong_scaling", n, round(data["us"], 1), data["nnz"]))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

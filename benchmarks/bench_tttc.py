@@ -1,0 +1,40 @@
+"""Paper Fig 10a: order-6 TTTc at 1% and 0.1% density (N scaled for CPU),
+R=16 — planned schedule wall-clock + op counts."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.core import spec as S
+from repro.core.executor import CSFArrays, VectorizedExecutor
+from repro.core.planner import plan
+from repro.sparse import build_csf, random_sparse
+
+
+def run(N: int = 16, R: int = 8):
+    rows = [("bench", "density", "us_per_call", "plan_flops_est")]
+    for density in (1e-2, 1e-3):
+        spec = S.tttc6(N, R)
+        T = random_sparse((N,) * 6, density, seed=4)
+        csf = build_csf(T)
+        rng = np.random.default_rng(0)
+        factors = {}
+        for t in spec.inputs:
+            if not t.is_sparse:
+                factors[t.name] = jax.numpy.asarray(rng.standard_normal(
+                    [spec.dims[i] for i in t.indices]).astype(np.float32))
+        pl_ = plan(spec, nnz_levels=csf.nnz_levels(), max_paths=64)
+        arrays = CSFArrays.from_csf(csf)
+        ex = VectorizedExecutor(spec, pl_.path, pl_.order)
+        fn = jax.jit(lambda f: ex(arrays, f))
+        t = timeit(fn, factors)
+        rows.append(("tttc6", density, round(t * 1e6, 1),
+                     f"{pl_.flops:.3g}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Paper Fig 9(c)/§7 TTTP (generalized SDDMM): planned vs unfactorized vs
+the Pallas leaf kernel (interpret mode on CPU; TPU target)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, tensor_suite, timeit
+from repro.core import spec as S
+from repro.core.executor import (CSFArrays, VectorizedExecutor,
+                                 execute_unfactorized)
+from repro.core.planner import plan
+from repro.kernels import ops
+
+
+def run(scale: float = 1.0, R: int = 32):
+    rows = [("bench", "tensor", "schedule", "us_per_call",
+             "speedup_vs_unfact")]
+    for name, csf in tensor_suite(scale).items():
+        I, J, K = csf.shape
+        spec = S.tttp3(I, J, K, R)
+        rng = np.random.default_rng(0)
+        factors = {
+            "U": jax.numpy.asarray(
+                rng.standard_normal((I, R)).astype(np.float32)),
+            "V": jax.numpy.asarray(
+                rng.standard_normal((J, R)).astype(np.float32)),
+            "W": jax.numpy.asarray(
+                rng.standard_normal((K, R)).astype(np.float32))}
+        arrays = CSFArrays.from_csf(csf)
+        unfact = jax.jit(lambda f: execute_unfactorized(spec, arrays, f))
+        t_unf = timeit(unfact, factors)
+        pl_ = plan(spec, nnz_levels=csf.nnz_levels())
+        ex = VectorizedExecutor(spec, pl_.path, pl_.order)
+        fused = jax.jit(lambda f: ex(arrays, f))
+        t_fus = timeit(fused, factors)
+        # leaf-kernel XLA path with precomputed coordinate gathers (jitted)
+        fc = csf.fiber_coords(3)
+        iidx, jidx, kidx = (jax.numpy.asarray(fc[:, m]) for m in range(3))
+        vals = jax.numpy.asarray(csf.values)
+        from repro.kernels import ref as kref
+        leaf = jax.jit(lambda f: kref.tttp_ref(
+            vals, f["U"][iidx], f["V"][jidx], f["W"][kidx]))
+        t_leaf = timeit(leaf, factors)
+        rows.append(("tttp", name, "unfactorized", round(t_unf * 1e6, 1),
+                     1.0))
+        rows.append(("tttp", name, "spttn-planned", round(t_fus * 1e6, 1),
+                     round(t_unf / t_fus, 2)))
+        rows.append(("tttp", name, "leaf-kernel-xla",
+                     round(t_leaf * 1e6, 1), round(t_unf / t_leaf, 2)))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing, synthetic tensors, CSV output."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.sparse import build_csf, random_sparse
+from repro.sparse.coo import long_fiber_sparse
+
+
+def timeit(fn, *args, warmup: int = 2, repeats: int = 5) -> float:
+    """Median wall-clock seconds per call (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def tensor_suite(scale: float = 1.0):
+    """Synthetic stand-ins for the paper's datasets (FROSTT is offline):
+    nell-2-like (skewed), uniform, and a small dense-ish one."""
+    s = lambda x: max(8, int(x * scale))
+    return {
+        "nell2-like": build_csf(random_sparse(
+            (s(1024), s(512), s(256)), 3e-4, seed=1, distribution="frostt")),
+        "uniform-3d": build_csf(random_sparse(
+            (s(512), s(512), s(512)), 1e-4, seed=2)),
+        "dense-ish": build_csf(random_sparse(
+            (s(96), s(96), s(96)), 5e-3, seed=3)),
+        # long (i,j)-fibers: nnz >> nnz^(IJ), the factorize-and-fuse regime
+        "long-fiber": build_csf(long_fiber_sparse(
+            (s(2048), s(2048), s(4096)), n_fibers=s(4096),
+            fiber_len=max(4, s(24)), seed=5)),
+    }
+
+
+def emit(rows: list[tuple]) -> None:
+    for r in rows:
+        print(",".join(str(x) for x in r), flush=True)

@@ -1,0 +1,47 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure.
+
+  Fig 8   -> bench_mttkrp        Fig 9c/§7 TTTP -> bench_tttp
+  §7 TTMc -> bench_ttmc          Fig 10a        -> bench_tttc
+  Fig 10c -> bench_index_order   Alg 1          -> bench_search
+  Fig 9/10b -> bench_strong_scaling (opt-in: SCALING=1, spawns subprocesses)
+  MoE-SpTTN integration          -> bench_moe_dispatch
+
+Prints ``name,...,us_per_call,derived`` CSV rows.  SCALE env var shrinks or
+grows tensor sizes (default 0.5 keeps the suite under ~2 min on CPU).
+"""
+from __future__ import annotations
+
+import os
+import traceback
+
+
+def main() -> None:
+    scale = float(os.environ.get("SCALE", "0.5"))
+    from benchmarks import (bench_index_order, bench_moe_dispatch,
+                            bench_mttkrp, bench_search, bench_strong_scaling,
+                            bench_tttc, bench_tttp, bench_ttmc)
+
+    suites = [
+        ("mttkrp", lambda: bench_mttkrp.run(scale=scale)),
+        ("ttmc", lambda: bench_ttmc.run(scale=scale)),
+        ("tttp", lambda: bench_tttp.run(scale=scale)),
+        ("tttc", lambda: bench_tttc.run()),
+        ("index_order", lambda: bench_index_order.run(
+            N=max(64, int(256 * scale)))),
+        ("search", bench_search.run),
+        ("moe_dispatch", bench_moe_dispatch.run),
+    ]
+    if os.environ.get("SCALING", "0") == "1":
+        suites.append(("strong_scaling", bench_strong_scaling.run))
+
+    for name, fn in suites:
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            print(f"{name},ERROR", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Fill EXPERIMENTS.md placeholder markers from dryrun_results.json."""
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.report import dryrun_table, roofline_table  # noqa: E402
+
+results = json.load(open("dryrun_results.json"))
+md = open("EXPERIMENTS.md").read()
+
+dr = dryrun_table(results)
+rl = (roofline_table(results, "16x16")
+      + "\n\n### multi-pod 2x16x16 (shardability proof + scaling check)\n\n"
+      + roofline_table(results, "2x16x16"))
+
+assert "<!-- DRYRUN_TABLE -->" in md and "<!-- ROOFLINE_TABLE -->" in md
+md = md.replace("<!-- DRYRUN_TABLE -->", dr)
+md = md.replace("<!-- ROOFLINE_TABLE -->", rl)
+open("EXPERIMENTS.md", "w").write(md)
+print("EXPERIMENTS.md tables filled:",
+      len([r for r in results if "roofline" in r]), "cells")

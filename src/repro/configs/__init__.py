@@ -1,0 +1,104 @@
+"""Architecture registry + input_specs for the dry-run.
+
+``get_config(arch)`` / ``get_reduced(arch)`` return full/smoke ModelConfigs;
+``input_specs(cfg, shape, ...)`` returns ShapeDtypeStruct stand-ins for every
+model input of that (arch x shape) cell — weak-type-correct, shardable, no
+device allocation.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, RunConfig, ShapeConfig
+
+_MODULES = {
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "olmo-1b": "olmo_1b",
+    "gemma3-1b": "gemma3_1b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "smollm-135m": "smollm_135m",
+    "rwkv6-3b": "rwkv6_3b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "seamless-m4t-large-v2": "seamless_m4t_large",
+    "phi-3-vision-4.2b": "phi3_vision_4b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def _mod(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _mod(arch).reduced()
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(runs?, reason).  long_500k only for sub-quadratic families
+    (DESIGN.md §5); every arch here is generative so decode always runs."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k skipped per spec"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: str | ShapeConfig,
+                for_loss: bool = True) -> dict:
+    """ShapeDtypeStruct stand-ins for the cell's step function inputs."""
+    sc = SHAPES[shape] if isinstance(shape, str) else shape
+    B, S = sc.global_batch, sc.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if sc.kind == "decode":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    else:
+        batch = {"tokens": tok}
+        if for_loss and sc.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.modality_stub == "vision" and sc.kind != "decode":
+        batch["stub"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_stub_tokens, cfg.d_model), cfg.compute_dtype)
+    if cfg.encdec and sc.kind != "decode":
+        # audio stub: precomputed frame embeddings for the encoder
+        batch["enc_frames"] = jax.ShapeDtypeStruct(
+            (B, S // 4, cfg.d_model), cfg.compute_dtype)
+    return batch
+
+
+def make_batch(cfg: ModelConfig, shape: str | ShapeConfig, seed: int = 0,
+               batch_override: int | None = None,
+               seq_override: int | None = None) -> dict:
+    """Concrete random batch matching input_specs (smoke tests/examples)."""
+    import numpy as np
+    sc = SHAPES[shape] if isinstance(shape, str) else shape
+    B = batch_override or sc.global_batch
+    S = seq_override or sc.seq_len
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if sc.kind == "train":
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    if cfg.modality_stub == "vision":
+        n = min(cfg.n_stub_tokens, S)
+        batch["stub"] = jnp.asarray(
+            rng.standard_normal((B, n, cfg.d_model)), cfg.compute_dtype)
+    if cfg.encdec:
+        batch["enc_frames"] = jnp.asarray(
+            rng.standard_normal((B, max(1, S // 4), cfg.d_model)),
+            cfg.compute_dtype)
+    return batch
+
+
+__all__ = ["ARCHS", "SHAPES", "ModelConfig", "RunConfig", "ShapeConfig",
+           "get_config", "get_reduced", "shape_applicable", "input_specs",
+           "make_batch"]

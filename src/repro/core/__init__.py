@@ -1,0 +1,28 @@
+"""Core SpTTN machinery: the paper's primary contribution.
+
+Public API:
+  spec.parse / spec.mttkrp / ...      SpTTN kernel specs
+  paths.min_depth_paths                contraction-path enumeration (§4.1.1)
+  loopnest.enumerate_orders            index-order enumeration (§4.1.2)
+  cost.{MaxBufferDim,MaxBufferSize,CacheMisses,ConstrainedBlas}   (§4.2)
+  order_dp.optimal_order               Algorithm 1
+  planner.plan / cached_plan           full pipeline (§5)
+  executor.{reference_execute,VectorizedExecutor,CSFArrays}       (Alg. 2)
+"""
+from repro.core import cost, executor, loopnest, order_dp, paths
+from repro.core import planner, spec
+from repro.core.cost import (CacheMisses, ConstrainedBlas, MaxBufferDim,
+                             MaxBufferSize)
+from repro.core.executor import (CSFArrays, VectorizedExecutor, dense_oracle,
+                                 execute_unfactorized, reference_execute)
+from repro.core.order_dp import optimal_order
+from repro.core.planner import SpTTNPlan, cached_plan, plan
+from repro.core.spec import SpTTNSpec, parse
+
+__all__ = [
+    "cost", "executor", "loopnest", "order_dp", "paths",
+    "planner", "spec", "CacheMisses", "ConstrainedBlas", "MaxBufferDim",
+    "MaxBufferSize", "CSFArrays", "VectorizedExecutor", "dense_oracle",
+    "execute_unfactorized", "reference_execute", "optimal_order",
+    "SpTTNPlan", "cached_plan", "plan", "SpTTNSpec", "parse",
+]

@@ -1,0 +1,467 @@
+"""SpTTN loop-nest execution (paper §5.1, Algorithm 2) — two engines.
+
+1. :func:`reference_execute` — a *literal* implementation of Algorithm 2:
+   recursive loop-nest generation over the CSF tree with buffer reset rules.
+   Pure numpy, exponentially slow, used as the semantic oracle.
+
+2. :class:`VectorizedExecutor` — the production engine.  The same fused
+   loop-nest plan is compiled to a vectorized JAX program:
+     * sparse loops          -> flattened fiber arrays (gather / segment_sum)
+     * innermost dense loops -> a single einsum/dot_general (MXU; the
+                                paper's BLAS offload, §5.1/Fig 7)
+     * loop fusion depth     -> the CSF level at which each intermediate is
+                                materialized (nnz^(I1..Ip) x dense buffer)
+   This is the TPU adaptation documented in DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import string
+from typing import Mapping, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.loopnest import LoopOrder, buffer_indices
+from repro.core.paths import ContractionPath, Term, consumer_map
+from repro.core.spec import SpTTNSpec
+from repro.sparse.csf import CSFTensor, level_segments
+
+
+# =========================================================================== #
+# Reference engine — Algorithm 2, literally
+# =========================================================================== #
+def _children_ptr(csf: CSFTensor, p: int) -> np.ndarray:
+    """Start offsets of each level-(p-1) fiber's children among level-p
+    fibers (contiguous because coordinates are lexicographically sorted)."""
+    nparent = csf.nfib[p - 1] if p > 1 else 1
+    if csf.nfib.get(p, 0) == 0:
+        return np.zeros(nparent + 1, dtype=np.int64)
+    parents = csf.parent[p] if p > 1 else np.zeros(csf.nfib[p], dtype=np.int32)
+    return np.searchsorted(parents, np.arange(nparent + 1))
+
+
+def reference_execute(spec: SpTTNSpec, path: ContractionPath,
+                      order: LoopOrder, csf: CSFTensor,
+                      factors: Mapping[str, np.ndarray]) -> np.ndarray:
+    """Execute a fused loop nest exactly as Algorithm 2 would (numpy loops).
+
+    Returns the DENSE output (sparse-pattern outputs are densified so tests
+    can compare against einsum oracles directly).
+    """
+    spos = {s: i for i, s in enumerate(spec.sparse_indices)}
+    cons = consumer_map(path)
+    binds = buffer_indices(path, order)
+    dims = spec.dims
+
+    # dense buffer allocation (reference keeps buffers at full declared size)
+    bufs: dict[str, np.ndarray] = {}
+    for u, inds in binds.items():
+        bufs[path[u].out.name] = np.zeros([dims[i] for i in inds],
+                                          dtype=np.float64)
+    buf_inds = {path[u].out.name: inds for u, inds in binds.items()}
+    out_arr = np.zeros([dims[i] for i in spec.output.indices],
+                       dtype=np.float64)
+
+    ptr = {p: _children_ptr(csf, p) for p in range(1, csf.order + 1)}
+
+    def term_value(op, env, fibers):
+        if op.name in factors:
+            return factors[op.name][tuple(env[i] for i in op.indices)]
+        if op.is_sparse and op.name == spec.sparse_input.name:
+            # the sparse tensor's term always has a full fiber chain: its
+            # sparse loops appear in storage order on the leaf's root path
+            assert len(fibers) == csf.order, "broken CSF chain at sparse leaf"
+            return csf.values[fibers[-1]]
+        b = bufs[op.name]
+        return b[tuple(env[i] for i in buf_inds[op.name])]
+
+    def exec_term(tid: int, env, fibers):
+        t = path[tid]
+        val = term_value(t.lhs, env, fibers) * term_value(t.rhs, env, fibers)
+        if t.out.name == "OUT":
+            out_arr[tuple(env[i] for i in spec.output.indices)] += val
+        else:
+            bufs[t.out.name][tuple(env[i] for i in buf_inds[t.out.name])] += val
+
+    def loop_nest(seq, env, fibers):
+        """seq: (term_id, remaining_order) pairs; ``fibers`` is the chain of
+        CSF fiber ids bound so far (levels 1..len(fibers) consecutively).
+
+        Buffer reset per Algorithm 2: a producer/consumer pair whose fused
+        loops diverge at this level has a buffer private to one iteration of
+        the enclosing loops, so it is zeroed here (they never rejoin deeper,
+        hence the reset fires exactly once per enclosing iteration)."""
+        pos_in = {tid: n for n, (tid, _) in enumerate(seq)}
+        for u, v in cons.items():
+            if u in pos_in and v in pos_in:
+                if not _same_group(seq, pos_in[u], pos_in[v]):
+                    bufs[path[u].out.name][...] = 0.0
+
+        i = 0
+        while i < len(seq):
+            tid, rem = seq[i]
+            if not rem:
+                exec_term(tid, env, fibers)
+                i += 1
+                continue
+            q = rem[0]
+            group = []
+            j = i
+            while j < len(seq) and seq[j][1] and seq[j][1][0] == q:
+                group.append((seq[j][0], seq[j][1][1:]))
+                j += 1
+            lvl = spos[q] + 1 if q in spos else None
+            if lvl is not None and len(fibers) == lvl - 1:
+                # sparse loop with intact chain: iterate CSF children
+                parent = fibers[-1] if fibers else 0
+                for fib in range(ptr[lvl][parent], ptr[lvl][parent + 1]):
+                    env2 = dict(env)
+                    env2[q] = int(csf.coord[lvl][fib])
+                    loop_nest(group, env2, fibers + (fib,))
+            else:
+                # dense loop (also the correct semantics for a sparse index
+                # whose CSF chain is broken — all reads are then from dense
+                # buffers/factors, e.g. a non-prefix intermediate)
+                for v in range(dims[q]):
+                    env2 = dict(env)
+                    env2[q] = v
+                    loop_nest(group, env2, fibers)
+            i = j
+        return
+
+    def _same_group(seq, iu, iv):
+        """True if positions iu..iv all share the same leading index."""
+        ru = seq[iu][1]
+        if not ru:
+            return False
+        q = ru[0]
+        for t in range(iu, iv + 1):
+            r = seq[t][1]
+            if not r or r[0] != q:
+                return False
+        return True
+
+    loop_nest([(i, a) for i, a in enumerate(order)], {}, ())
+    return out_arr
+
+
+def dense_oracle(spec: SpTTNSpec, csf: CSFTensor,
+                 factors: Mapping[str, np.ndarray]) -> np.ndarray:
+    """np.einsum over densified operands — the ultimate ground truth."""
+    letters = {}
+    for i in spec.all_indices:
+        letters[i] = string.ascii_lowercase[len(letters)]
+    operands, subs = [], []
+    for t in spec.inputs:
+        if t.is_sparse:
+            operands.append(csf.coo.to_dense().astype(np.float64))
+        else:
+            operands.append(np.asarray(factors[t.name], dtype=np.float64))
+        subs.append("".join(letters[i] for i in t.indices))
+    out_sub = "".join(letters[i] for i in spec.output.indices)
+    return np.einsum(",".join(subs) + "->" + out_sub, *operands)
+
+
+# =========================================================================== #
+# Vectorized JAX engine
+# =========================================================================== #
+@dataclasses.dataclass
+class FiberVal:
+    """A tensor carried on the level-p fibers of the sparse tensor:
+    array shape = (nfib_p, *dense_dims)."""
+    array: jnp.ndarray
+    level: int
+    dense: tuple[str, ...]
+
+
+@dataclasses.dataclass
+class DenseVal:
+    array: jnp.ndarray
+    indices: tuple[str, ...]
+
+
+@dataclasses.dataclass
+class CSFArrays:
+    """Device-resident CSF (one-time upload; pattern is fixed)."""
+    values: jnp.ndarray
+    fiber_coord: dict[int, dict[int, jnp.ndarray]]  # level -> mode -> coords
+    seg: dict[tuple[int, int], jnp.ndarray]         # (child, parent) -> map
+    nfib: dict[int, int]
+    order: int
+    shape: tuple[int, ...]
+
+    @classmethod
+    def from_csf(cls, csf: CSFTensor) -> "CSFArrays":
+        fiber_coord: dict[int, dict[int, jnp.ndarray]] = {}
+        for p in range(1, csf.order + 1):
+            fc = csf.fiber_coords(p)
+            fiber_coord[p] = {m: jnp.asarray(fc[:, m]) for m in range(p)}
+        seg = {}
+        for child in range(1, csf.order + 1):
+            for par in range(0, child):
+                seg[(child, par)] = jnp.asarray(
+                    level_segments(csf, child, par))
+        return cls(values=jnp.asarray(csf.values),
+                   fiber_coord=fiber_coord, seg=seg,
+                   nfib=dict(csf.nfib), order=csf.order,
+                   shape=csf.shape)
+
+
+class VectorizedExecutor:
+    """Compile a (path, order) plan into a JAX function over CSF arrays.
+
+    The plan's fused sparse depth per intermediate decides the CSF level at
+    which it is materialized; trailing dense loops become one einsum.
+    """
+
+    def __init__(self, spec: SpTTNSpec, path: ContractionPath,
+                 order: LoopOrder):
+        self.spec = spec
+        self.path = path
+        self.order = order
+        self.spos = {s: i for i, s in enumerate(spec.sparse_indices)}
+        from repro.core.loopnest import fused_sparse_depth
+        self.fuse_depth = fused_sparse_depth(path, order, spec.sparse_indices)
+        self._letter = {}
+        for i in spec.all_indices:
+            self._letter[i] = string.ascii_lowercase[len(self._letter)]
+
+    # -- helpers -------------------------------------------------------- #
+    def _sparse_level(self, inds: Sequence[str]) -> int:
+        return max((self.spos[i] + 1 for i in inds if i in self.spos),
+                   default=0)
+
+    def _is_prefix(self, inds: Sequence[str]) -> bool:
+        """True if the sparse indices of ``inds`` form a CSF storage prefix."""
+        sp = sorted(self.spos[i] for i in inds if i in self.spos)
+        return sp == list(range(len(sp)))
+
+    def _lift_dense_factor(self, csf: CSFArrays, arr: jnp.ndarray,
+                           inds: tuple[str, ...], level: int
+                           ) -> tuple[jnp.ndarray, tuple[str, ...]]:
+        """Gather a dense operand's rows onto level-``level`` fibers, one
+        gather per sparse index it carries."""
+        sp_axes = [(ax, self.spos[i] ) for ax, i in enumerate(inds)
+                   if i in self.spos]
+        if not sp_axes:
+            return arr, inds
+        take = arr
+        # gather axes one at a time, moving each gathered axis to the front
+        # and collapsing them into the fiber dimension
+        idx = None
+        dense_inds = tuple(i for i in inds if i not in self.spos)
+        # build advanced-index tuple
+        index_tuple = []
+        for ax, i in enumerate(inds):
+            if i in self.spos:
+                index_tuple.append(csf.fiber_coord[level][self.spos[i]])
+            else:
+                index_tuple.append(slice(None))
+        # numpy-style mixed advanced indexing: all advanced indices are 1-D
+        # fiber-length vectors -> broadcast to a single fiber axis in front
+        out = take[tuple(index_tuple)]
+        # jnp places the broadcast advanced axis first when advanced indices
+        # are non-contiguous; when contiguous it stays in place.  Normalize:
+        adv_pos = [ax for ax, i in enumerate(inds) if i in self.spos]
+        contiguous = adv_pos == list(range(adv_pos[0], adv_pos[0] + len(adv_pos)))
+        if contiguous and adv_pos[0] != 0:
+            # fiber axis sits at adv_pos[0]; move to front
+            out = jnp.moveaxis(out, adv_pos[0], 0)
+        return out, dense_inds
+
+    def _einsum(self, a: jnp.ndarray, ai: Sequence[str],
+                b: jnp.ndarray, bi: Sequence[str],
+                oi: Sequence[str], fiber: bool) -> jnp.ndarray:
+        L = self._letter
+        batch = "Z" if fiber else ""
+        sa = batch + "".join(L[i] for i in ai)
+        sb = batch + "".join(L[i] for i in bi)
+        so = batch + "".join(L[i] for i in oi)
+        return jnp.einsum(f"{sa},{sb}->{so}", a, b)
+
+    # -- main ----------------------------------------------------------- #
+    def __call__(self, csf: CSFArrays,
+                 factors: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+        spec = self.spec
+        env: dict[str, FiberVal | DenseVal] = {}
+
+        def get_operand(op) -> FiberVal | DenseVal:
+            if op.is_sparse and op.name == spec.sparse_input.name:
+                return FiberVal(csf.values, csf.order, ())
+            if op.name in factors:
+                return DenseVal(jnp.asarray(factors[op.name]), op.indices)
+            return env[op.name]
+
+        def to_dense(v: FiberVal | DenseVal,
+                     want: tuple[str, ...]) -> jnp.ndarray:
+            """Materialize onto a dense array with index order ``want``."""
+            if isinstance(v, DenseVal):
+                perm = [v.indices.index(i) for i in want]
+                return jnp.transpose(v.array, perm)
+            # scatter fiber rows into a dense array over its sparse prefix
+            sp_inds = tuple(spec.sparse_indices[:v.level])
+            full = sp_inds + v.dense
+            shape = [spec.dims[i] for i in full]
+            coords = tuple(csf.fiber_coord[v.level][m] for m in range(v.level))
+            out = jnp.zeros(shape, v.array.dtype).at[coords].add(
+                v.array, unique_indices=True)  # distinct fibers: no dups
+            perm = [full.index(i) for i in want]
+            return jnp.transpose(out, perm)
+
+        for tid, term in enumerate(self.path):
+            a = get_operand(term.lhs)
+            b = get_operand(term.rhs)
+            out_inds = term.out.indices
+            term_sp = [i for i in term.indices if i in self.spos]
+            prefix_ok = (self._is_prefix(term.indices)
+                         and self._is_prefix(out_inds))
+            is_final = term.out.name == "OUT"
+
+            if term_sp and prefix_ok and (isinstance(a, FiberVal)
+                                          or isinstance(b, FiberVal)):
+                val = self._exec_fiber_term(csf, term, a, b)
+            elif (term_sp and is_final and self._is_prefix(term.indices)
+                  and (isinstance(a, FiberVal) or isinstance(b, FiberVal))):
+                # final term keeping a non-prefix sparse subset (e.g. TTTc's
+                # OUT(e,n)): einsum at the term level, then scatter-add by
+                # the kept coordinate columns (implicitly summing the rest)
+                return self._exec_final_scatter(csf, term, a, b)
+            else:
+                # dense fallback (covers dense x dense and non-prefix cases)
+                ai = tuple(term.lhs.indices)
+                bi = tuple(term.rhs.indices)
+                da = to_dense(a, ai)
+                db = to_dense(b, bi)
+                arr = self._einsum(da, ai, db, bi, out_inds, fiber=False)
+                val = DenseVal(arr, out_inds)
+
+            if is_final:
+                if isinstance(val, DenseVal):
+                    perm = [val.indices.index(i) for i in spec.output.indices]
+                    return jnp.transpose(val.array, perm)
+                if spec.output_is_sparse:
+                    # same-sparsity output: return leaf values (level = order)
+                    assert val.level == csf.order and not val.dense
+                    return val.array
+                return to_dense(val, spec.output.indices)
+            env[term.out.name] = val
+        raise AssertionError("path had no final term")
+
+    # ------------------------------------------------------------------ #
+    def _lift(self, csf: CSFArrays, v, ref, lvl: int):
+        """Bring an operand onto level-``lvl`` fibers."""
+        if isinstance(v, FiberVal):
+            arr = v.array
+            if v.level < lvl:
+                arr = arr[csf.seg[(lvl, v.level)]]
+            return arr, v.dense
+        return self._lift_dense_factor(csf, v.array, ref.indices, lvl)
+
+    def _exec_final_scatter(self, csf: CSFArrays, term: Term, a, b):
+        """Final term whose kept sparse indices are not a storage prefix:
+        scatter-add fiber rows by the kept coordinate columns."""
+        spec = self.spec
+        lvl = self._sparse_level(term.indices)
+        fa, da = self._lift(csf, a, term.lhs, lvl)
+        fb, db = self._lift(csf, b, term.rhs, lvl)
+        out_inds = spec.output.indices
+        out_sp = [i for i in out_inds if i in self.spos]
+        out_dense = tuple(i for i in out_inds if i not in self.spos)
+        arr = self._einsum(fa, da, fb, db, out_dense, fiber=True)
+        coords = tuple(csf.fiber_coord[lvl][self.spos[i]] for i in out_sp)
+        shape = [spec.dims[i] for i in out_sp] + \
+            [spec.dims[i] for i in out_dense]
+        full = tuple(out_sp) + out_dense
+        out = jnp.zeros(shape, arr.dtype).at[coords].add(arr)
+        perm = [full.index(i) for i in out_inds]
+        return jnp.transpose(out, perm) if perm != list(range(len(perm))) \
+            else out
+
+    def _exec_fiber_term(self, csf: CSFArrays, term: Term,
+                         a: "FiberVal | DenseVal",
+                         b: "FiberVal | DenseVal") -> FiberVal:
+        """sparse-structured term: lift to the term's CSF level, einsum the
+        dense dims (MXU), segment-reduce to the output's level."""
+        lvl = self._sparse_level(term.indices)
+        out_lvl = self._sparse_level(term.out.indices)
+
+        fa, da = self._lift(csf, a, term.lhs, lvl)
+        fb, db = self._lift(csf, b, term.rhs, lvl)
+        sp = set(self.spos)
+        out_dense = tuple(i for i in term.out.indices if i not in sp)
+        # dense-contracted indices are handled inside one einsum (BLAS/MXU)
+        arr = self._einsum(fa, da, fb, db, out_dense, fiber=True)
+        if out_lvl < lvl:
+            seg = csf.seg[(lvl, out_lvl)] if out_lvl > 0 else jnp.zeros(
+                arr.shape[0], jnp.int32)
+            nseg = csf.nfib[out_lvl] if out_lvl > 0 else 1
+            # CSF order is lexicographic: segment ids are sorted, which
+            # lets XLA lower the reduction as a contiguous segmented scan
+            # instead of a scatter (§Perf wall-clock iteration 1)
+            arr = jax.ops.segment_sum(arr, seg, num_segments=nseg,
+                                      indices_are_sorted=True)
+            if out_lvl == 0:
+                arr = arr[0]
+                return DenseVal(arr, out_dense)  # fully contracted prefix
+        return FiberVal(arr, out_lvl, out_dense)
+
+
+def execute_unfactorized(spec: SpTTNSpec, csf: CSFArrays,
+                         factors: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+    """The 'unfactorized' schedule (paper §2.4.1): all factors gathered to
+    the leaves and multiplied in one pass (TACO/COMET default).  Kept as a
+    baseline for the benchmarks."""
+    spos = {s: i for i, s in enumerate(spec.sparse_indices)}
+    letters = {}
+    for i in spec.all_indices:
+        letters[i] = string.ascii_lowercase[len(letters)]
+    lvl = csf.order
+    operands = [csf.values]
+    subs = ["Z"]
+    for t in spec.inputs:
+        if t.is_sparse:
+            continue
+        arr = jnp.asarray(factors[t.name])
+        idx = []
+        for ax, i in enumerate(t.indices):
+            if i in spos:
+                idx.append(csf.fiber_coord[lvl][spos[i]])
+            else:
+                idx.append(slice(None))
+        g = arr[tuple(idx)]
+        adv = [ax for ax, i in enumerate(t.indices) if i in spos]
+        if adv and adv != list(range(adv[0], adv[0] + len(adv))):
+            pass  # jnp already moved fiber axis front
+        elif adv and adv[0] != 0:
+            g = jnp.moveaxis(g, adv[0], 0)
+        operands.append(g)
+        subs.append("Z" + "".join(letters[i] for i in t.indices
+                                  if i not in spos))
+    out_sp = [i for i in spec.output.indices if i in spos]
+    out_dn = [i for i in spec.output.indices if i not in spos]
+    expr = ",".join(subs) + "->Z" + "".join(letters[i] for i in out_dn)
+    per_leaf = jnp.einsum(expr, *operands)
+    if spec.output_is_sparse:
+        return per_leaf
+    p_out = len(out_sp)
+    if p_out < lvl:
+        seg = csf.seg[(lvl, p_out)] if p_out > 0 else jnp.zeros(
+            per_leaf.shape[0], jnp.int32)
+        nseg = csf.nfib[p_out] if p_out > 0 else 1
+        per_leaf = jax.ops.segment_sum(per_leaf, seg, num_segments=nseg,
+                                       indices_are_sorted=True)
+    # scatter onto the dense output over the sparse output indices
+    full = tuple(out_sp) + tuple(out_dn)
+    if p_out == 0:
+        out = per_leaf[0]
+    else:
+        shape = [spec.dims[i] for i in full]
+        coords = tuple(csf.fiber_coord[p_out][m] for m in range(p_out))
+        out = jnp.zeros(shape, per_leaf.dtype).at[coords].add(
+            per_leaf, unique_indices=True)
+    perm = [full.index(i) for i in spec.output.indices]
+    return jnp.transpose(out, perm) if perm != list(range(len(perm))) else out

@@ -1,0 +1,140 @@
+"""SpTTN planner (paper §5): pick the minimum-cost fully-fused loop nest.
+
+Pipeline:  enumerate min-depth contraction paths  →  Algorithm 1 per path
+(under the chosen tree-separable cost)  →  tie-break across paths by the
+sparse-aware FLOP model  →  an executable :class:`SpTTNPlan`.
+
+Plans are cached by (spec signature, nnz-level profile), mirroring the
+paper's observation that the schedule depends only on the fixed sparsity
+pattern, not on values.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Mapping, Sequence
+
+from repro.core import cost as cost_lib
+from repro.core.cost import ConstrainedBlas, TreeCost, path_flops
+from repro.core.loopnest import LoopOrder
+from repro.core.order_dp import OrderDP
+from repro.core.paths import ContractionPath, min_depth_paths, path_depth
+from repro.core.spec import SpTTNSpec
+
+
+@dataclasses.dataclass
+class SpTTNPlan:
+    """A chosen schedule: contraction path + loop order (+ diagnostics)."""
+
+    spec: SpTTNSpec
+    path: ContractionPath
+    order: LoopOrder
+    cost: float
+    flops: float
+    depth: int
+
+    def describe(self) -> str:  # pragma: no cover - debugging aid
+        lines = [f"SpTTNPlan depth={self.depth} cost={self.cost} "
+                 f"flops={self.flops:.3g}"]
+        for t, a in zip(self.path, self.order):
+            lines.append(f"  {t}   order={','.join(a)}")
+        return "\n".join(lines)
+
+
+def plan(spec: SpTTNSpec,
+         cost: TreeCost | None = None,
+         nnz_levels: Mapping[int, int] | None = None,
+         max_paths: int | None = 64,
+         depth_slack: int = 0) -> SpTTNPlan:
+    """Find the minimum-cost loop nest for an SpTTN kernel.
+
+    Default cost is the paper's experiment metric (§7): maximize BLAS-able
+    innermost dense loops with intermediate buffer dimension bounded by 2.
+    """
+    cost = cost or ConstrainedBlas(bound=2)
+    if nnz_levels is None:
+        # density-agnostic default: nnz^(I1..Ip) grows with the prefix space
+        sp = spec.sparse_indices
+        prod = 1
+        nnz_levels = {0: 1}
+        for p, ind in enumerate(sp, start=1):
+            prod *= spec.dims[ind]
+            nnz_levels[p] = prod
+
+    def search(cost, max_paths):
+        best: SpTTNPlan | None = None
+        for path in min_depth_paths(spec, max_paths=max_paths,
+                                    slack=depth_slack):
+            dp = OrderDP(path, cost, spec.dims, spec.sparse_indices)
+            res = dp.solve()
+            if res.order is None or res.cost == cost_lib.INF:
+                continue
+            c = res.cost
+            if isinstance(cost, ConstrainedBlas):
+                c += cost.order_independent_offset(path, spec.sparse_indices)
+            f = path_flops(path, spec.dims, spec.sparse_indices, nnz_levels)
+            cand = SpTTNPlan(spec=spec, path=path, order=res.order, cost=c,
+                             flops=f, depth=path_depth(path))
+            if best is None or (cand.cost, cand.flops) < (best.cost,
+                                                          best.flops):
+                best = cand
+        return best
+
+    best = search(cost, max_paths)
+    if best is None and max_paths is not None:
+        # constraint infeasible within the path cap: widen the search
+        best = search(cost, None)
+    if best is None and isinstance(cost, ConstrainedBlas):
+        # every path violates the buffer bound: fall back to minimizing
+        # buffer size outright (always feasible)
+        from repro.core.cost import MaxBufferSize
+        best = search(MaxBufferSize(), max_paths)
+    if best is None:
+        raise ValueError(f"no feasible loop nest found for {spec}")
+    return best
+
+
+@functools.lru_cache(maxsize=256)
+def _cached_plan_key(expr: str, dims_key: tuple, sparse: int | None,
+                     nnz_key: tuple, bound: int) -> SpTTNPlan:
+    from repro.core.spec import parse
+    spec = parse(expr, dims=dict(dims_key), sparse=sparse)
+    return plan(spec, cost=ConstrainedBlas(bound=bound),
+                nnz_levels=dict(nnz_key) if nnz_key else None)
+
+
+def cached_plan(expr: str, dims: Mapping[str, int], sparse: int | None = 0,
+                nnz_levels: Mapping[int, int] | None = None,
+                bound: int = 2) -> SpTTNPlan:
+    """LRU-cached planning keyed by the kernel signature (pattern-static)."""
+    return _cached_plan_key(expr, tuple(sorted(dims.items())), sparse,
+                            tuple(sorted((nnz_levels or {}).items())), bound)
+
+
+def autotune(spec: SpTTNSpec, csf, factors,
+             candidates: Sequence[tuple[ContractionPath, LoopOrder]],
+             repeats: int = 3):
+    """Measurement-driven selection among enumerated loop nests (§4's
+    'enumeration enables autotuning').  Executes each candidate with the
+    vectorized engine and returns (best_candidate, timings)."""
+    import time
+
+    import jax
+
+    from repro.core.executor import CSFArrays, VectorizedExecutor
+
+    arrays = CSFArrays.from_csf(csf) if not hasattr(csf, "values_") else csf
+    results = []
+    for path, order in candidates:
+        ex = VectorizedExecutor(spec, path, order)
+        fn = jax.jit(lambda f, e=ex: e(arrays, f))
+        out = fn(factors)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = fn(factors)
+        jax.block_until_ready(out)
+        results.append(((time.perf_counter() - t0) / repeats, path, order))
+    results.sort(key=lambda r: r[0])
+    t, path, order = results[0]
+    return (path, order), results

@@ -1,0 +1,4 @@
+from repro.data import pipeline
+from repro.data.pipeline import SyntheticLM, make_loader
+
+__all__ = ["pipeline", "SyntheticLM", "make_loader"]

@@ -1,0 +1,3 @@
+from repro.distributed import collectives, sharding, spttn_dist
+
+__all__ = ["collectives", "sharding", "spttn_dist"]

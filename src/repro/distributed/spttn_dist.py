@@ -1,0 +1,273 @@
+"""Distributed SpTTN execution — the paper's §5.2 mapped to shard_map.
+
+CTF layout, TPU-native:
+  * the sparse tensor is partitioned by tensor modes onto mesh axes and
+    NEVER moves (cyclic load balance = host-side row permutation + block
+    partition, which is the same layout up to relabeling);
+  * each dense factor is sharded along the modes it shares with a
+    partitioned sparse mode and *partially replicated* along every other
+    mesh axis (the paper's replication scheme);
+  * each device runs the SAME fused loop-nest plan on its local CSF (the
+    local problem is an SpTTN of identical structure — paper §1);
+  * the output is reduced (psum) only over mesh axes that own contracted
+    sparse modes, and comes out naturally sharded over output modes.
+
+Local CSFs are padded to common sizes so one jaxpr serves all shards; all
+padding is provably zero-contributing (zero values / fiber-0 segments).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.executor import CSFArrays, VectorizedExecutor
+from repro.core.planner import SpTTNPlan
+from repro.core.spec import SpTTNSpec
+from repro.sparse.coo import COOTensor, _sorted
+from repro.sparse.csf import build_csf, level_segments
+
+
+@dataclasses.dataclass
+class DistributedSpTTN:
+    """Compiled distributed kernel: call with (values_stack, factors)."""
+
+    spec: SpTTNSpec
+    plan: SpTTNPlan
+    mesh: Mesh
+    mode_axis: dict[int, str]           # sparse mode -> mesh axis
+    stacked: dict                       # (P, ...) padded CSF arrays
+    perm: np.ndarray                    # nnz permutation (global -> stacked)
+    fn: object                          # jitted shard_map callable
+    factor_perm: dict = dataclasses.field(default_factory=dict)
+
+    def __call__(self, factors: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+        prepared = {}
+        for name, arr in factors.items():
+            perm = self.factor_perm.get(name)
+            if perm is not None:
+                axis, take = perm
+                arr = jnp.asarray(arr)
+                pad = [(0, 0)] * arr.ndim
+                pad[axis] = (0, 1)  # zero row for out-of-range slots
+                arr = jnp.pad(arr, pad)
+                arr = jnp.take(arr, jnp.asarray(take), axis=axis)
+            prepared[name] = arr
+        return self.fn(self.stacked, prepared)
+
+
+def _pad_local_csf(csf, max_nnz: int, max_nfib: dict[int, int]):
+    """Flattened per-level arrays padded with zero-contribution entries."""
+    order = csf.order
+    out = {"values": np.zeros(max_nnz, csf.values.dtype)}
+    out["values"][: csf.nnz] = csf.values
+    for p in range(1, order + 1):
+        fc = csf.fiber_coords(p)
+        for m in range(p):
+            a = np.zeros(max_nfib[p], np.int32)
+            a[: csf.nfib[p]] = fc[:, m]
+            out[f"coord_{p}_{m}"] = a
+    for child in range(1, order + 1):
+        for par in range(0, child):
+            seg = level_segments(csf, child, par)
+            a = np.zeros(max_nfib[child], np.int32)
+            a[: len(seg)] = seg
+            out[f"seg_{child}_{par}"] = a
+    return out
+
+
+def _unpack_csf(stacked_local: dict, order: int, nfib: dict[int, int],
+                shape) -> CSFArrays:
+    fiber_coord = {p: {m: stacked_local[f"coord_{p}_{m}"]
+                       for m in range(p)} for p in range(1, order + 1)}
+    seg = {(c, par): stacked_local[f"seg_{c}_{par}"]
+           for c in range(1, order + 1) for par in range(0, c)}
+    return CSFArrays(values=stacked_local["values"], fiber_coord=fiber_coord,
+                     seg=seg, nfib=nfib, order=order, shape=shape)
+
+
+def make_distributed(spec: SpTTNSpec, plan: SpTTNPlan, coo: COOTensor,
+                     mesh: Mesh, mode_axis: dict[int, str],
+                     cyclic: bool = True) -> DistributedSpTTN:
+    """Partition ``coo`` per ``mode_axis`` and build the shard_map kernel.
+
+    Only mode 0 (+ optionally mode 1) partitioning is exercised in tests;
+    the construction is generic over any subset of modes.
+    """
+    sp_inds = spec.sparse_indices
+    shape = coo.shape
+    coords = coo.coords.copy()
+    values = coo.values.copy()
+
+    # cyclic load balance == row permutation + block partition
+    nparts = {m: mesh.shape[ax] for m, ax in mode_axis.items()}
+    local_dim = {m: -(-shape[m] // nparts[m]) for m in mode_axis}
+    owner = np.zeros(len(values), np.int64)
+    mult = 1
+    part_of = {}
+    for m, ax in mode_axis.items():
+        if cyclic:
+            part = coords[:, m] % nparts[m]
+            local = coords[:, m] // nparts[m]
+        else:
+            part = coords[:, m] // local_dim[m]
+            local = coords[:, m] % local_dim[m]
+        coords[:, m] = local
+        part_of[m] = part
+        owner = owner * nparts[m] + part
+        mult *= nparts[m]
+    nshards = mult
+
+    # bucket nonzeros per shard, build local CSFs, pad to common sizes
+    order = coo.order
+    buckets = [np.flatnonzero(owner == s) for s in range(nshards)]
+    local_shape = tuple(local_dim.get(m, shape[m]) for m in range(order))
+    csfs = []
+    sorted_ids = []                 # global nnz id per (shard, local slot)
+    for idx in buckets:
+        key = np.lexsort(coords[idx].T[::-1])
+        lc = COOTensor(coords=np.ascontiguousarray(coords[idx][key]),
+                       values=np.ascontiguousarray(values[idx][key]),
+                       shape=local_shape)
+        csfs.append(build_csf(lc))
+        sorted_ids.append(idx[key])
+    max_nnz = max(max(c.nnz for c in csfs), 1)
+    max_nfib = {p: max(max(c.nfib.get(p, 0) for c in csfs), 1)
+                for p in range(1, order + 1)}
+    packed = [_pad_local_csf(c, max_nnz, max_nfib) for c in csfs]
+    stacked = {k: jnp.asarray(np.stack([pk[k] for pk in packed]))
+               for k in packed[0]}
+
+    # shardings: stacked CSF arrays over the partition axes (flattened)
+    part_axes = tuple(mode_axis[m] for m in mode_axis)
+    csf_specs = {k: P(part_axes) for k in stacked}
+    dims_local = dict(spec.dims)
+    for m, ind in enumerate(sp_inds):
+        if m in mode_axis:
+            dims_local[ind] = local_shape[m]
+    import dataclasses as dc
+    local_spec = dc.replace(
+        spec,
+        dims=dims_local,
+        output=spec.output)
+
+    # factor shardings: shard along partitioned shared modes, replicate
+    # rest (paper §5.2 partial replication).  shard_map splits factor rows
+    # BLOCK-wise, so rows are pre-permuted into [part, local] stacked order
+    # to match the (cyclic) relabeling of the sparse tensor's coordinates.
+    factor_specs = {}
+    factor_perm: dict[str, tuple[int, np.ndarray] | None] = {}
+    for t in spec.inputs:
+        if t.is_sparse:
+            continue
+        parts = []
+        factor_perm[t.name] = None
+        for axpos, ind in enumerate(t.indices):
+            ax = None
+            for m, a in mode_axis.items():
+                if sp_inds[m] == ind:
+                    ax = a
+                    P_m, Ld, I_m = nparts[m], local_dim[m], shape[m]
+                    take = np.full(P_m * Ld, I_m, np.int64)  # pad row id
+                    for part in range(P_m):
+                        for l in range(Ld):
+                            g = (l * P_m + part) if cyclic else \
+                                (part * Ld + l)
+                            if g < I_m:
+                                take[part * Ld + l] = g
+                    factor_perm[t.name] = (axpos, take)
+            parts.append(ax)
+        factor_specs[t.name] = P(*parts)
+
+    # output sharding: partitioned output sparse modes stay sharded;
+    # contracted partitioned modes need a psum
+    out_parts = []
+    reduce_axes = []
+    for ind in spec.output.indices:
+        ax = None
+        for m, a in mode_axis.items():
+            if sp_inds[m] == ind:
+                ax = a
+        out_parts.append(ax)
+    for m, a in mode_axis.items():
+        if sp_inds[m] not in spec.output.indices:
+            reduce_axes.append(a)
+    out_spec = P(*out_parts) if not spec.output_is_sparse else P(part_axes)
+
+    executor = VectorizedExecutor(local_spec, plan.path, plan.order)
+    nfib_static = dict(max_nfib)
+
+    def local_fn(stacked_local, factors):
+        # shard_map delivers block-local arrays with a leading shard dim of 1
+        local = {k: v.reshape(v.shape[1:]) for k, v in stacked_local.items()}
+        arrays = _unpack_csf(local, order, nfib_static, local_shape)
+        out = executor(arrays, factors)
+        for a in reduce_axes:
+            out = jax.lax.psum(out, a)
+        return out
+
+    fn = jax.jit(jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(csf_specs, factor_specs),
+        out_specs=out_spec,
+        check_vma=False))
+
+    dist = DistributedSpTTN(spec=spec, plan=plan, mesh=mesh,
+                            mode_axis=dict(mode_axis), stacked=stacked,
+                            perm=np.concatenate(sorted_ids), fn=fn,
+                            factor_perm=factor_perm)
+    dist.nnz_per_shard = [c.nnz for c in csfs]
+    dist.max_nnz = max_nnz
+    return dist
+
+
+def gather_sparse_values(dist: DistributedSpTTN, out_stacked) -> np.ndarray:
+    """Reassemble a same-sparsity (TTTP-like) output into the original COO
+    nonzero order from the stacked per-shard value layout."""
+    vals = np.asarray(out_stacked).reshape(len(dist.nnz_per_shard),
+                                           dist.max_nnz)
+    total = int(sum(dist.nnz_per_shard))
+    out = np.zeros(total, vals.dtype)
+    for s, n in enumerate(dist.nnz_per_shard):
+        ids = dist.perm[sum(dist.nnz_per_shard[:s]):
+                        sum(dist.nnz_per_shard[:s]) + n]
+        out[ids] = vals[s, :n]
+    return out
+
+
+def undo_cyclic(out: np.ndarray, spec: SpTTNSpec, mode_axis, mesh,
+                shape, cyclic: bool = True) -> np.ndarray:
+    """Invert the cyclic row relabeling on output modes for comparison."""
+    sp_inds = spec.sparse_indices
+    res = out
+    for m, ax in mode_axis.items():
+        ind = sp_inds[m]
+        if ind not in spec.output.indices:
+            continue
+        axis = spec.output.indices.index(ind)
+        nparts = mesh.shape[ax]
+        I = shape[m]
+        local = -(-I // nparts)
+        if not cyclic:
+            res = np.take(res, np.arange(I), axis=axis)
+            continue
+        # stacked layout: [part, local] -> global = local*nparts + part
+        idx = np.zeros(nparts * local, np.int64)
+        for p in range(nparts):
+            for l in range(local):
+                g = l * nparts + p
+                if g < I:
+                    idx[p * local + l] = g
+        take = np.zeros(I, np.int64)
+        for p in range(nparts):
+            for l in range(local):
+                g = l * nparts + p
+                if g < I:
+                    take[g] = p * local + l
+        res = np.take(res, take, axis=axis)
+    return res

@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the perf-critical compute layers, each with a
+# pure-jnp oracle in ref.py and a jit'd wrapper in ops.py:
+#   mttkrp / ttmc / tttp      — the paper's SpTTN hot loops (Eqs. 1-3)
+#   grouped_matmul            — MoE expert GEMM (SpTTN-planned dispatch)
+#   wkv6 / rglru / local_attn — recurrence & block-sparse attention kernels
+# All validated in interpret mode on CPU; BlockSpecs are sized for v5e VMEM.
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: expert-grouped GEMM for MoE dispatch/combine.
+
+This is the lowered form of the SpTTN plan for the MoE combine kernel
+(DESIGN.md §4): the sparse top-k routing tensor is factorized into a
+sort/capacity dispatch (static-shape gather) + a *dense batched GEMM over
+experts* — the factorize-and-fuse schedule the planner picks over the
+"unfactorized" dense one-hot einsum.
+
+y[e] = x[e] @ w[e], x (E, C, D), w (E, D, F) — tiled over (E, C, F, D)
+with a VMEM accumulator over the D grid axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc, *, nd: int):
+    kd = pl.program_id(3)
+
+    @pl.when(kd == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        x_ref[0], w_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # fp32 MXU accumulation
+
+    @pl.when(kd == nd - 1)
+    def _flush():
+        o_ref[...] = acc[...].astype(o_ref.dtype)[None]
+
+
+def grouped_matmul_pallas(x: jnp.ndarray, w: jnp.ndarray,
+                          bc: int = 128, bf: int = 128, bd: int = 512,
+                          interpret: bool = True) -> jnp.ndarray:
+    """x (E, C, D) @ w (E, D, F) -> (E, C, F).
+
+    Block sizes default to MXU-aligned tiles; VMEM per step =
+    (bc*bd + bd*bf + bc*bf) * 4B = 128*512*2*4 + 64KiB ≈ 576 KiB.
+    """
+    E, C, D = x.shape
+    F = w.shape[2]
+    bc, bf, bd = min(bc, C), min(bf, F), min(bd, D)
+    assert C % bc == 0 and F % bf == 0 and D % bd == 0
+    grid = (E, C // bc, F // bf, D // bd)
+    return pl.pallas_call(
+        functools.partial(_kernel, nd=D // bd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bd, bf), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

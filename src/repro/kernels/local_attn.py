@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: block-sparse sliding-window flash attention.
+
+The banded causal mask is a *static* sparsity pattern, so the attention
+logits are exactly the paper's TTTP/SDDMM kernel with a fixed block-sparse
+pattern (DESIGN.md §4): only the W kv-blocks inside the window are ever
+visited — the grid itself encodes the sparse iteration space, the way a
+CSF loop nest only visits nonzero fibers.
+
+Online-softmax accumulators (m, l, acc) live in VMEM scratch carried over
+the kv-block grid axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, bq: int, bk: int, wblocks: int, window: int, scale: float):
+    qb = pl.program_id(1)
+    wb = pl.program_id(2)
+
+    @pl.when(wb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kvb = qb + wb - (wblocks - 1)  # kv block index (may be < 0: fully masked)
+
+    @pl.when(kvb >= 0)
+    def _attend():
+        q = q_ref[0] * scale                       # (bq, d)
+        k = k_ref[0]                               # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kvb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        # block granularity sparsity comes from the grid itself; within a
+        # block the exact causal + window element mask applies
+        mask = (kpos <= qpos) & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(wb == wblocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def local_attn_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      window: int, bq: int = 128, bk: int = 128,
+                      scale: float | None = None,
+                      interpret: bool = True) -> jnp.ndarray:
+    """q/k/v: (BH, T, D) flattened batch*heads.  Causal sliding window.
+
+    The kv-block axis has ceil(window/bk)+1 steps per q block — compute is
+    O(T * window), not O(T^2).  VMEM per step ≈ (bq + 2*bk) * D * 4B +
+    bq*(D+2)*4B scratch.
+    """
+    BH, T, D = q.shape
+    assert T % bq == 0 and T % bk == 0
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    # enough kv blocks that qpos - window + 1 is always covered
+    wblocks = max(1, min(T // bk, (window + bq - 1) // bk + 1))
+    grid = (BH, T // bq, wblocks)
+
+    def kv_index(b, qb, wb):
+        kvb = qb + wb - (wblocks - 1)
+        return (b, jnp.maximum(kvb, 0), 0)
+
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, wblocks=wblocks,
+                               window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, qb, wb: (b, qb, 0)),
+            pl.BlockSpec((1, bk, D), kv_index),
+            pl.BlockSpec((1, bk, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, qb, wb: (b, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,168 @@
+"""jit'd wrappers for the Pallas kernels, including the host-side static
+layout plumbing from CSF structures (computed once per sparsity pattern).
+
+Every op has the same signature contract: `*_op(...)` takes device arrays +
+a static layout and returns the kernel result; `use_pallas=False` falls
+back to the pure-jnp reference (the XLA path used on CPU and in the
+dry-run; the Pallas path is the TPU target, validated via interpret=True).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Mapping
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.grouped_matmul import grouped_matmul_pallas
+from repro.kernels.local_attn import local_attn_pallas
+from repro.kernels.mttkrp import mttkrp_pallas
+from repro.kernels.rglru import rglru_pallas
+from repro.kernels.ttmc import ttmc_pallas
+from repro.kernels.tttp import tttp_pallas
+from repro.kernels.util import PaddedSegments, padded_segment_layout
+from repro.kernels.wkv6 import wkv6_pallas
+from repro.sparse.csf import CSFTensor, level_segments
+
+
+# --------------------------------------------------------------------------- #
+# layouts
+# --------------------------------------------------------------------------- #
+def mttkrp_layout(csf: CSFTensor, block: int = 256) -> PaddedSegments:
+    """Pad nonzeros per output row (mode-0 slice) to block multiples."""
+    seg1 = level_segments(csf, csf.order, 1)
+    return padded_segment_layout(seg1, csf.nfib[1], block)
+
+
+def ttmc_fiber_layout(csf: CSFTensor, block: int = 128) -> PaddedSegments:
+    """Pad level-2 fibers per output row to block multiples."""
+    seg = level_segments(csf, 2, 1)
+    return padded_segment_layout(seg, csf.nfib[1], block)
+
+
+# --------------------------------------------------------------------------- #
+# MTTKRP:  A(i,a) = sum_jk T(i,j,k) B(j,a) C(k,a)
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("nseg", "block", "interpret"))
+def mttkrp_op(vals, jidx, kidx, b, c, gather, mask, block_seg, block_first,
+              nseg: int, block: int = 256, interpret: bool = True):
+    """vals/jidx/kidx are leaf-level CSF arrays; gather/mask/* from layout.
+    Factor rows are gathered by XLA into the padded layout; the kernel
+    fuses mask * vals * B[j] * C[k] + per-row reduction in VMEM."""
+    bg = b[jidx[gather]]  # (P, R) XLA gather straight into padded layout
+    cg = c[kidx[gather]]
+    vp = vals[gather]
+    return mttkrp_pallas(vp[:, None], bg, cg, mask[:, None],
+                         block_seg, block_first, nseg, block=block,
+                         interpret=interpret)
+
+
+def mttkrp(csf: CSFTensor, b: jnp.ndarray, c: jnp.ndarray,
+           layout: PaddedSegments | None = None, block: int = 256,
+           use_pallas: bool = True, interpret: bool = True) -> jnp.ndarray:
+    """Convenience driver (gathers + kernel) for the order-3 MTTKRP leaf."""
+    jidx = jnp.asarray(csf.fiber_coords(csf.order)[:, 1])
+    kidx = jnp.asarray(csf.fiber_coords(csf.order)[:, 2])
+    vals = jnp.asarray(csf.values)
+    if not use_pallas:
+        seg1 = jnp.asarray(level_segments(csf, csf.order, 1))
+        return ref.mttkrp_ref(vals, b[jidx], c[kidx], seg1, csf.nfib[1])
+    layout = layout or mttkrp_layout(csf, block)
+    return mttkrp_op(vals, jidx, kidx, b, c,
+                     jnp.asarray(layout.gather), jnp.asarray(layout.mask),
+                     jnp.asarray(layout.block_seg),
+                     jnp.asarray(layout.block_first),
+                     nseg=layout.nseg, block=layout.block,
+                     interpret=interpret)
+
+
+# --------------------------------------------------------------------------- #
+# TTMc fiber stage:  OUT[i] += U[j_f]^T ⊗ X[f]   over level-2 fibers f
+# --------------------------------------------------------------------------- #
+def ttmc_fiber(ug: jnp.ndarray, xf: jnp.ndarray, layout: PaddedSegments,
+               use_pallas: bool = True, interpret: bool = True):
+    if not use_pallas:
+        # layout.gather maps padded slots -> fiber ids; recover seg per slot
+        seg = jnp.asarray(np.repeat(layout.block_seg, layout.block))
+        return ref.ttmc_fiber_ref(xf[jnp.asarray(layout.gather)]
+                                  * jnp.asarray(layout.mask)[:, None],
+                                  ug[jnp.asarray(layout.gather)],
+                                  seg, layout.nseg)
+    g = jnp.asarray(layout.gather)
+    m = jnp.asarray(layout.mask)[:, None]
+    return ttmc_pallas(ug[g] * m, xf[g] * m,
+                       jnp.asarray(layout.block_seg),
+                       jnp.asarray(layout.block_first),
+                       layout.nseg, block=layout.block, interpret=interpret)
+
+
+# --------------------------------------------------------------------------- #
+# TTTP leaf:  out[n] = vals[n] * sum_r U[i,r] V[j,r] W[k,r]
+# --------------------------------------------------------------------------- #
+def tttp(csf: CSFTensor, u: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+         block: int = 512, use_pallas: bool = True,
+         interpret: bool = True) -> jnp.ndarray:
+    fc = csf.fiber_coords(csf.order)
+    iidx, jidx, kidx = (jnp.asarray(fc[:, m]) for m in range(3))
+    vals = jnp.asarray(csf.values)
+    ug, vg, wg = u[iidx], v[jidx], w[kidx]
+    if not use_pallas:
+        return ref.tttp_ref(vals, ug, vg, wg)
+    nnz = vals.shape[0]
+    pad = (-nnz) % block
+    if pad:
+        vals = jnp.pad(vals, (0, pad))
+        ug = jnp.pad(ug, ((0, pad), (0, 0)))
+        vg = jnp.pad(vg, ((0, pad), (0, 0)))
+        wg = jnp.pad(wg, ((0, pad), (0, 0)))
+    out = tttp_pallas(vals[:, None], ug, vg, wg, block=block,
+                      interpret=interpret)
+    return out[:nnz, 0]
+
+
+# --------------------------------------------------------------------------- #
+# passthroughs
+# --------------------------------------------------------------------------- #
+def grouped_matmul(x, w, use_pallas: bool = True, interpret: bool = True,
+                   **kw):
+    if not use_pallas:
+        return ref.grouped_matmul_ref(x, w)
+    return grouped_matmul_pallas(x, w, interpret=interpret, **kw)
+
+
+def wkv6(r, k, v, w, u, use_pallas: bool = True, interpret: bool = True,
+         chunk: int = 128):
+    """r/k/v/w (B,T,H,K), u (H,K)."""
+    if not use_pallas:
+        return ref.wkv6_ref(r, k, v, w, u)
+    B, T, H, K = r.shape
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, T, K)
+    uu = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, K)
+    out = wkv6_pallas(fold(r), fold(k), fold(v), fold(w), uu,
+                      chunk=min(chunk, T), interpret=interpret)
+    return out.reshape(B, H, T, K).transpose(0, 2, 1, 3)
+
+
+def rglru(x, a, use_pallas: bool = True, interpret: bool = True,
+          chunk: int = 256):
+    if not use_pallas:
+        return ref.rglru_ref(x, a)
+    B, T, D = x.shape
+    return rglru_pallas(x, a, chunk=min(chunk, T), interpret=interpret)
+
+
+def local_attn(q, k, v, window: int, use_pallas: bool = True,
+               interpret: bool = True, bq: int = 128, bk: int = 128):
+    """q/k/v (B,T,H,D)."""
+    if not use_pallas:
+        return ref.local_attn_ref(q, k, v, window)
+    B, T, H, D = q.shape
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    bq = min(bq, T)
+    bk = min(bk, T)
+    out = local_attn_pallas(fold(q), fold(k), fold(v), window,
+                            bq=bq, bk=bk, interpret=interpret)
+    return out.reshape(B, H, T, D).transpose(0, 2, 1, 3)

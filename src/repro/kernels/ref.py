@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the ref side of each
+kernel/ops/ref triple).  These are the semantics the kernels must match
+bit-for-bit up to float tolerance, swept over shapes/dtypes in tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mttkrp_ref(vals: jnp.ndarray, bg: jnp.ndarray, cg: jnp.ndarray,
+               seg: jnp.ndarray, nseg: int) -> jnp.ndarray:
+    """out[s, :] = sum_{n: seg[n]=s} vals[n] * bg[n, :] * cg[n, :]."""
+    part = vals[:, None] * bg * cg
+    return jax.ops.segment_sum(part, seg, num_segments=nseg)
+
+
+def ttmc_fiber_ref(xf: jnp.ndarray, ug: jnp.ndarray, seg: jnp.ndarray,
+                   nseg: int) -> jnp.ndarray:
+    """out[s, r, t] = sum_{f: seg[f]=s} ug[f, r] * xf[f, t]  (fiber outer
+    products accumulated per output row — the BLAS-2 xGER of Fig 7)."""
+    outer = ug[:, :, None] * xf[:, None, :]
+    return jax.ops.segment_sum(outer, seg, num_segments=nseg)
+
+
+def tttp_ref(vals: jnp.ndarray, ug: jnp.ndarray, vg: jnp.ndarray,
+             wg: jnp.ndarray) -> jnp.ndarray:
+    """out[n] = vals[n] * sum_r ug[n,r] vg[n,r] wg[n,r]  (TTTP/SDDMM leaf)."""
+    return vals * jnp.sum(ug * vg * wg, axis=-1)
+
+
+def grouped_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(E, C, D) x (E, D, F) -> (E, C, F) batched expert GEMM."""
+    return jnp.einsum("ecd,edf->ecf", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def wkv6_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+             w: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """RWKV6 WKV: per head, S_t = diag(exp(-exp(w_t))) S_{t-1} + k_t v_t^T,
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T).
+
+    Shapes: r/k/v/w (B, T, H, K), u (H, K); out (B, T, H, K).
+    """
+    B, T, H, K = r.shape
+
+    def one_head(rb, kb, vb, wb, uh):
+        def step(s, xs):
+            rt, kt, vt, wt = xs
+            decay = jnp.exp(-jnp.exp(wt))  # data-dependent per-channel decay
+            kv = kt[:, None] * vt[None, :]
+            out = rt @ (s + uh[:, None] * kv)
+            return decay[:, None] * s + kv, out
+
+        _, o = jax.lax.scan(step, jnp.zeros((K, K), r.dtype),
+                            (rb, kb, vb, wb))
+        return o
+
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, T, K)
+    uu = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, K)
+    o = jax.vmap(one_head)(fold(r), fold(k), fold(v), fold(w), uu)
+    return o.reshape(B, H, T, K).transpose(0, 2, 1, 3)
+
+
+def rglru_ref(x: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """RG-LRU linear recurrence: h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * x_t.
+    Shapes (B, T, D); returns h (B, T, D).  Associative-scan form."""
+    gate = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0)) * x
+
+    def op(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    av, bv = jax.lax.associative_scan(op, (a, gate), axis=1)
+    return bv
+
+
+def local_attn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   window: int, scale: float | None = None) -> jnp.ndarray:
+    """Causal sliding-window attention oracle.  q/k/v: (B, T, H, D)."""
+    B, T, H, D = q.shape
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    idx = jnp.arange(T)
+    mask = (idx[None, :] <= idx[:, None]) & (idx[None, :] > idx[:, None] - window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)

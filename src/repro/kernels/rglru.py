@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: RG-LRU gated linear recurrence (RecurrentGemma).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * x_t     (elementwise, per channel)
+
+Sequential time-chunk grid with the (1, D) hidden state carried in VMEM
+scratch; pure VPU work, bandwidth-bound — the kernel exists to keep the
+recurrence on-chip instead of materializing scan carries through HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 256
+
+
+def _kernel(x_ref, a_ref, o_ref, h, *, chunk: int):
+    tb = pl.program_id(1)
+
+    @pl.when(tb == 0)
+    def _init():
+        h[...] = jnp.zeros_like(h)
+
+    def step(t, carry):
+        at = a_ref[0, t]
+        gated = jnp.sqrt(jnp.clip(1.0 - at * at, 0.0, 1.0)) * x_ref[0, t]
+        new = at * carry + gated
+        o_ref[0, t] = new
+        return new
+
+    h[0] = jax.lax.fori_loop(0, chunk, step, h[0])
+
+
+def rglru_pallas(x: jnp.ndarray, a: jnp.ndarray,
+                 chunk: int = DEFAULT_CHUNK,
+                 interpret: bool = True) -> jnp.ndarray:
+    """x, a: (B, T, D); returns h: (B, T, D).  T % chunk == 0."""
+    B, T, D = x.shape
+    assert T % chunk == 0
+    grid = (B, T // chunk)
+    spec = pl.BlockSpec((1, chunk, D), lambda b, t: (b, t, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, D), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+        interpret=interpret,
+    )(x, a)

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused TTMc output stage (paper Eq. 2 / Listing 3 term 2).
+
+Per level-2 fiber f (with output row i_f): OUT[i_f] += U[j_f,:]^T ⊗ X[f,:].
+A block of BF fibers belonging to one output row becomes a single MXU
+matmul (R x BF) @ (BF x S) — this is the paper's BLAS-2 xGER offload
+lifted to a BLAS-3 block (Fig 7), accumulated in the VMEM-resident output
+block across the row's fiber blocks (sequential grid revisit).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 128
+
+
+def _kernel(block_seg, block_first, ug_ref, xf_ref, o_ref):
+    b = pl.program_id(0)
+
+    @pl.when(block_first[b] == 1)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (R, BF) @ (BF, S) on the MXU; padded fibers contribute zero rows.
+    o_ref[...] += jax.lax.dot_general(
+        ug_ref[...], xf_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=o_ref.dtype)[None]
+
+
+def ttmc_pallas(ug: jnp.ndarray, xf: jnp.ndarray, block_seg: jnp.ndarray,
+                block_first: jnp.ndarray, nseg: int,
+                block: int = DEFAULT_BLOCK,
+                interpret: bool = True) -> jnp.ndarray:
+    """ug (P, R) gathered U rows, xf (P, S) fiber intermediates, both in the
+    padded per-output-row layout (pads are zero rows).  Output (nseg, R, S).
+
+    VMEM per step: block*(R+S)*4 + R*S*4 — block=128, R=S=128: ~192 KiB.
+    """
+    P, R = ug.shape
+    S = xf.shape[1]
+    assert P % block == 0
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(P // block,),
+        in_specs=[
+            pl.BlockSpec((block, R), lambda i, bs, bf: (i, 0)),
+            pl.BlockSpec((block, S), lambda i, bs, bf: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, R, S), lambda i, bs, bf: (bs[i], 0, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((nseg, R, S), ug.dtype),
+        interpret=interpret,
+    )(block_seg, block_first, ug, xf)

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: TTTP / generalized SDDMM leaf (paper Eq. 3).
+
+out[n] = vals[n] * sum_r U[i_n,r] V[j_n,r] W[k_n,r]
+
+Embarrassingly parallel over nonzero blocks; the kernel fuses the 3-way
+Hadamard and the R-reduction in VMEM (one pass over the gathered rows, no
+(nnz, R) HBM temporaries).  The same kernel with W=1 is exactly SDDMM —
+the static-pattern sparse-attention logit kernel (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 512
+
+
+def _kernel(vals_ref, ug_ref, vg_ref, wg_ref, o_ref):
+    prod = ug_ref[...] * vg_ref[...] * wg_ref[...]
+    o_ref[...] = vals_ref[...] * jnp.sum(prod, axis=1, keepdims=True)
+
+
+def tttp_pallas(vals: jnp.ndarray, ug: jnp.ndarray, vg: jnp.ndarray,
+                wg: jnp.ndarray, block: int = DEFAULT_BLOCK,
+                interpret: bool = True) -> jnp.ndarray:
+    """vals (P, 1); ug/vg/wg (P, R) gathered factor rows (P padded to block).
+
+    VMEM per step: ~3*block*R*4B; block=512, R=64 -> 384 KiB.
+    """
+    P, R = ug.shape
+    assert P % block == 0
+    grid = (P // block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block, R), lambda i: (i, 0)),
+            pl.BlockSpec((block, R), lambda i: (i, 0)),
+            pl.BlockSpec((block, R), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, 1), vals.dtype),
+        interpret=interpret,
+    )(vals, ug, vg, wg)

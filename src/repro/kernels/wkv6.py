@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: RWKV6 (Finch) WKV recurrence with data-dependent decay.
+
+Per head:  S_t = diag(exp(-exp(w_t))) S_{t-1} + k_t v_t^T
+           o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+The (K, K) state lives in a VMEM scratch carried across the sequential
+time-chunk grid axis (TPU grids execute in order — the idiomatic way to
+pipeline a linear recurrence).  Within a chunk the time loop runs over
+VMEM-resident tiles; outer products and the r-contraction are VPU/MXU ops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state, *, chunk: int):
+    tb = pl.program_id(1)
+
+    @pl.when(tb == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    u = u_ref[0]  # (K,)
+
+    def step(t, s):
+        rt = r_ref[0, t]
+        kt = k_ref[0, t]
+        vt = v_ref[0, t]
+        decay = jnp.exp(-jnp.exp(w_ref[0, t]))
+        kv = kt[:, None] * vt[None, :]                     # (K, K) outer
+        o_ref[0, t] = rt @ (s + u[:, None] * kv)           # (K,) MXU row
+        return decay[:, None] * s + kv
+
+    state[...] = jax.lax.fori_loop(0, chunk, step, state[...])
+
+
+def wkv6_pallas(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                w: jnp.ndarray, u: jnp.ndarray,
+                chunk: int = DEFAULT_CHUNK,
+                interpret: bool = True) -> jnp.ndarray:
+    """r/k/v/w: (BH, T, K) flattened batch*heads; u: (BH, K). Out (BH, T, K).
+
+    VMEM per step: 5 * chunk * K * 4B + K*K*4B scratch — chunk=128, K=64:
+    ~180 KiB.  T must be a multiple of chunk.
+    """
+    BH, T, K = r.shape
+    assert T % chunk == 0
+    grid = (BH, T // chunk)
+    spec = pl.BlockSpec((1, chunk, K), lambda b, t: (b, t, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, K), lambda b, t: (b, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((BH, T, K), r.dtype),
+        scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,6 @@
+# launch layer: mesh construction, multi-pod dry-run, roofline analysis,
+# train/serve drivers.  NOTE: import repro.launch.dryrun only in dedicated
+# processes — it sets XLA_FLAGS to 512 fake devices at import time.
+from repro.launch import mesh
+
+__all__ = ["mesh"]

@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import: jax locks the device count on first
+# initialization, and the dry-run needs 512 placeholder CPU devices to build
+# the production mesh.  (Smoke tests / benches do NOT import this module.)
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+#
+# For each cell this lowers the real step function (train_step / prefill /
+# decode_step) with ShapeDtypeStruct inputs (no allocation), compiles it for
+# the 16x16 single-pod and 2x16x16 multi-pod meshes, and records:
+#   * compiled.memory_analysis()  — bytes per device (proves it fits),
+#   * compiled.cost_analysis()    — HLO FLOPs / bytes for §Roofline,
+#   * collective operand bytes parsed from the optimized HLO (with scan-body
+#     trip-count multiplicity) — the collective roofline term.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+#   python -m repro.launch.dryrun --all [--multi-pod] --out results.json
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCHS, SHAPES, RunConfig, get_config, input_specs,
+                           shape_applicable)
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (analytic_memory, collective_bytes_from_hlo,
+                                   roofline_terms, summarize_cost)
+from repro.models import transformer as T
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def abstract_params(cfg: ModelConfig):
+    """(params ShapeDtypeStructs, logical-axis specs) without allocating.
+
+    The specs tree is plain python (tuples of strings) built during the
+    traced init; it escapes via a side channel since eval_shape outputs
+    must be arrays."""
+    box = {}
+
+    def init(k):
+        p, s = T.model_init(k, cfg)
+        box["specs"] = s
+        return p
+
+    params_shapes = jax.eval_shape(init, jax.random.PRNGKey(0))
+    return params_shapes, box["specs"]
+
+
+def _lower(cfg: ModelConfig, sc, mesh, rules, kv_dtype=jnp.bfloat16,
+           unroll: bool = False):
+    """Lower the cell's real step function with ShapeDtypeStruct inputs."""
+    run = RunConfig(model=cfg, microbatches=1, scan_unroll=unroll)
+    params_shapes, specs = abstract_params(cfg)
+    params_sh = SH.tree_sharding(params_shapes, specs, rules, mesh)
+    if sc.kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda p: init_train_state(p), params_shapes)
+        state_sh = _state_sharding(state_shapes, params_sh, mesh)
+        batch_shapes = input_specs(cfg, sc)
+        batch_sh = _batch_sharding(batch_shapes, rules, mesh)
+        step = make_train_step(cfg, run)
+        with SH.mesh_context(mesh, rules):
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh),
+                donate_argnums=(0,)).lower(state_shapes, batch_shapes)
+    elif sc.kind == "prefill":
+        batch_shapes = input_specs(cfg, sc)
+        batch_sh = _batch_sharding(batch_shapes, rules, mesh)
+
+        def pre(params, batch):
+            return T.prefill(params, cfg, batch, remat=True, unroll=unroll)
+
+        with SH.mesh_context(mesh, rules):
+            lowered = jax.jit(
+                pre, in_shardings=(params_sh, batch_sh)).lower(
+                params_shapes, batch_shapes)
+    else:  # decode
+        B, S = sc.global_batch, sc.seq_len
+        cache_shapes = jax.eval_shape(
+            lambda: T.init_cache(cfg, B, S, kv_dtype))
+        cache_sh = _cache_sharding(cache_shapes, rules, mesh, B, S)
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        enc_shapes = None
+        if cfg.encdec:
+            enc_shapes = jax.ShapeDtypeStruct((B, S // 4, cfg.d_model),
+                                              cfg.compute_dtype)
+
+        def dec(params, caches, tokens, p, enc_out=None):
+            return T.decode_step(params, cfg, caches, tokens, p,
+                                 enc_out=enc_out, unroll=unroll)
+
+        with SH.mesh_context(mesh, rules):
+            args = [params_shapes, cache_shapes, tok, pos]
+            in_sh = [params_sh, cache_sh, SH.NamedSharding(mesh, SH.P()),
+                     SH.NamedSharding(mesh, SH.P())]
+            if enc_shapes is not None:
+                args.append(enc_shapes)
+                in_sh.append(SH.NamedSharding(mesh, SH.P()))
+            lowered = jax.jit(
+                dec, in_shardings=tuple(in_sh),
+                donate_argnums=(1,)).lower(*args)
+    return lowered
+
+
+def _probe_cfg(cfg: ModelConfig, n_groups: int) -> ModelConfig:
+    """Variant with exactly ``n_groups`` scanned groups (head/tail intact in
+    structure, tail dropped) — used to measure per-group HLO cost exactly
+    via the difference of two compiles (XLA counts while bodies once)."""
+    g = len(cfg.block_pattern)
+    head = cfg.moe.first_dense if cfg.moe is not None else 0
+    kw = {"n_layers": head + n_groups * g}
+    if cfg.encdec:
+        kw["n_enc_layers"] = n_groups
+    return dataclasses.replace(cfg, **kw)
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               kv_dtype=jnp.bfloat16, probe: bool = True,
+               preset: str = "2d", cfg_override=None):
+    cfg = cfg_override or get_config(arch)
+    sc = SHAPES[shape]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "skipped": why,
+                "mesh": "2x16x16" if multi_pod else "16x16"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    seq_shard = sc.kind == "decode" and sc.global_batch < mesh.shape["data"]
+    rules = SH.default_rules(multi_pod, sc.kind, seq_shard=seq_shard,
+                             preset=preset)
+
+    t0 = time.time()
+    lowered = _lower(cfg, sc, mesh, rules, kv_dtype)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = summarize_cost(compiled.cost_analysis())
+    res = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "preset": preset,
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost": cost,
+        "memory": _mem_dict(mem),
+    }
+
+    # exact loop-body correction: XLA's cost_analysis counts a while body
+    # once; compile 2-group and 3-group probes and take the difference
+    from repro.models.transformer import layer_plan
+    G = layer_plan(cfg, decoder=True).n_groups
+    if probe and G > 1:
+        try:
+            # probes UNROLL the scan so every group is counted, then the
+            # 3-group minus 2-group difference is exactly one group's cost
+            comp2 = _lower(_probe_cfg(cfg, 2), sc, mesh, rules, kv_dtype,
+                           unroll=True).compile()
+            comp3 = _lower(_probe_cfg(cfg, 3), sc, mesh, rules, kv_dtype,
+                           unroll=True).compile()
+            c2 = summarize_cost(comp2.cost_analysis())
+            c3 = summarize_cost(comp3.cost_analysis())
+            body = {k: max(c3.get(k, 0.0) - c2.get(k, 0.0), 0.0)
+                    for k in c3}
+            res["cost_corrected"] = {
+                k: c2.get(k, 0.0) + (G - 2) * body.get(k, 0.0)
+                for k in c2}
+            res["probe_body"] = body
+            # collective bytes, probe-exact (no trip-count heuristic)
+            w2 = collective_bytes_from_hlo(comp2.as_text(), [])
+            w3 = collective_bytes_from_hlo(comp3.as_text(), [])
+            body_wire = max(w3["wire_bytes"] - w2["wire_bytes"], 0)
+            res["collectives_probe"] = {
+                "wire_bytes": w2["wire_bytes"] + (G - 2) * body_wire,
+                "per_group_wire_bytes": body_wire,
+                "per_op_bytes_2g": w2["per_op_bytes"],
+            }
+        except Exception as e:
+            res["cost_corrected"] = {"error": str(e)[:300]}
+    else:
+        res["cost_corrected"] = dict(cost)
+
+    try:
+        scan_trips = _scan_trip_counts(cfg)
+        res["collectives"] = collective_bytes_from_hlo(
+            compiled.as_text(), scan_trips)
+    except Exception as e:  # HLO text can be very large; stay robust
+        res["collectives"] = {"error": str(e)[:200]}
+    res["analytic_memory"] = analytic_memory(cfg, sc, n_dev, multi_pod)
+    res["roofline"] = roofline_terms(res, cfg, sc, n_dev)
+    return res
+
+
+def _state_sharding(state_shapes, params_sh, mesh):
+    from repro.train.train_step import TrainState
+    from repro.train.optimizer import AdamWState
+    rep = SH.NamedSharding(mesh, SH.P())
+    return TrainState(
+        params=params_sh,
+        opt=AdamWState(m=params_sh, v=params_sh, step=rep))
+
+
+def _batch_sharding(batch_shapes, rules, mesh):
+    dataxes = rules["act_batch"]
+    out = {}
+    for k, v in batch_shapes.items():
+        parts = [dataxes] + [None] * (len(v.shape) - 1)
+        out[k] = SH.NamedSharding(mesh, SH.P(*parts))
+    return out
+
+
+def _cache_sharding(cache_shapes, rules, mesh, B: int, S: int):
+    """KV/state cache shardings.  Batched decode: shard the batch axis over
+    the data axes; long-context (batch < data axis): shard the sequence
+    axis instead (flash-decode partial-softmax, psum'd by GSPMD)."""
+    data = rules["act_batch"]
+    seq = rules.get("act_seq")
+    axes = (data,) if isinstance(data, str) else tuple(data)
+    d_extent = 1
+    for a in axes:
+        d_extent *= mesh.shape[a]
+
+    def one(leaf):
+        sizes = leaf.shape
+        parts = [None] * len(sizes)
+        if seq is not None:
+            for ax, sz in enumerate(sizes):
+                if sz == S and sz % mesh.shape[seq] == 0:
+                    parts[ax] = seq
+                    break
+        else:
+            for ax, sz in enumerate(sizes):
+                if sz == B and sz % d_extent == 0:
+                    parts[ax] = data
+                    break
+        return SH.NamedSharding(mesh, SH.P(*parts))
+
+    return jax.tree.map(one, cache_shapes)
+
+
+def _mem_dict(mem):
+    if mem is None:
+        return None
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _scan_trip_counts(cfg: ModelConfig) -> list[int]:
+    """Candidate loop trip counts for scan-body collective multiplicity."""
+    from repro.models.transformer import layer_plan
+    plan = layer_plan(cfg, decoder=True)
+    trips = [plan.n_groups]
+    if cfg.encdec:
+        trips.append(cfg.n_enc_layers)
+    return [t for t in trips if t > 1]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--preset", default="2d")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            print(f"=== {arch} x {shape} x "
+                  f"{'2x16x16' if mp else '16x16'} ===", flush=True)
+            try:
+                res = lower_cell(arch, shape, mp, preset=args.preset)
+            except Exception as e:
+                import traceback
+                traceback.print_exc()
+                res = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "error": f"{type(e).__name__}: {e}"[:500]}
+            print(json.dumps(res, indent=1, default=str)[:2000], flush=True)
+            results.append(res)
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, default=str)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,279 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e target):
+  PEAK_FLOPS = 197e12 bf16 FLOP/s per chip
+  HBM_BW     = 819e9  B/s per chip
+  ICI_BW     = 50e9   B/s per link (3D-torus; ~2 usable links per transfer
+               direction on a 16x16 slice — we charge 1 link per collective
+               stream, the conservative bound)
+
+Terms (seconds, per step, per chip):
+  compute    = HLO_FLOPs / PEAK_FLOPS
+  memory     = HLO_bytes / HBM_BW
+  collective = wire_bytes / ICI_BW
+
+cost_analysis() reports per-partition numbers for SPMD executables; while
+loops (our layer scans) count their body ONCE, so both FLOPs and collective
+bytes found inside scan bodies are multiplied by the known trip count
+(configs are static — trip counts are exact, not heuristic).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Mapping
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.-]*)\s*=\s*([a-z0-9]+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_COMP_RE = re.compile(r"^\s*(%?[\w.-]+)\s+\([^)]*\)\s*->", re.M)
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo: str, scan_trips: list[int]) -> dict:
+    """Sum collective payload bytes from optimized HLO text.
+
+    Collectives inside a computation referenced as a while-loop body are
+    multiplied by the scan trip count (matched greedily to the known trip
+    counts; an unmatched body gets multiplicity max(trips) to stay
+    conservative).  all-reduce wire bytes are charged 2x payload (ring).
+    """
+    # map computation name -> list of (op, bytes)
+    per_comp: dict[str, list[tuple[str, int]]] = {}
+    comp = "__entry__"
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.startswith(("ENTRY ", "%fused", "HloModule")):
+            pass
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.-]+)\s+\([^)]*\)\s*->", stripped)
+        if m and ("{" in stripped or stripped.endswith("->")):
+            comp = m.group(1)
+        cm = _COLL_RE.search(stripped)
+        if cm:
+            _, dtype, dims, op, _ = cm.groups()
+            b = _shape_bytes(dtype, dims)
+            per_comp.setdefault(comp, []).append((op, b))
+    # find while bodies
+    bodies = set(_WHILE_BODY_RE.findall(hlo))
+    mult = max(scan_trips) if scan_trips else 1
+    totals: dict[str, float] = {}
+    wire = 0.0
+    for comp_name, items in per_comp.items():
+        k = mult if any(comp_name.startswith(b) or b.startswith(comp_name)
+                        for b in bodies) else 1
+        for op, b in items:
+            factor = 2.0 if op == "all-reduce" else 1.0
+            totals[op] = totals.get(op, 0.0) + k * b
+            wire += k * b * factor
+    return {"per_op_bytes": {k: int(v) for k, v in totals.items()},
+            "wire_bytes": int(wire),
+            "scan_multiplier": mult,
+            "n_collectives": sum(len(v) for v in per_comp.values())}
+
+
+def summarize_cost(cost) -> dict:
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals",
+              "optimal_seconds"):
+        if k in cost:
+            out[k.replace(" ", "_")] = float(cost[k])
+    return out
+
+
+def model_flops(cfg, sc) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D for dense (N_active for MoE) per step,
+    plus a per-kind mixing term: S^2 attention (windowed for 'local'
+    layers), O(S) latent-cache attention for MLA decode, O(K^2) recurrent
+    state updates for RG-LRU/RWKV."""
+    n_active = active_params(cfg)
+    tokens = sc.global_batch * (sc.seq_len if sc.kind != "decode" else 1)
+    base = (6.0 if sc.kind == "train" else 2.0) * n_active * tokens
+    L = cfg.n_layers
+    hd = cfg.hd
+    S = sc.seq_len
+    B = sc.global_batch
+    bwd = 3.0 if sc.kind == "train" else 1.0
+    kinds = cfg.pattern_for_layers()
+    mix = 0.0
+    w = min(cfg.window or S, S)
+    for kind in kinds:
+        if kind in ("attn", "xattn", "local"):
+            span = w if kind == "local" else S
+            if sc.kind == "decode":
+                if cfg.mla is not None:
+                    # absorbed MLA: scores+ctx read the compressed latent
+                    m = cfg.mla
+                    mix += 4.0 * B * cfg.n_heads * span * \
+                        (m.kv_lora + m.qk_rope_dim)
+                else:
+                    mix += 4.0 * B * span * cfg.n_kv_heads * hd
+            else:
+                mix += bwd * 2.0 * 2.0 * B * S * span * cfg.n_heads * hd
+        elif kind == "rglru":
+            mix += bwd * 2.0 * B * (S if sc.kind != "decode" else 1) \
+                * cfg.d_model * 4
+        elif kind == "rwkv":
+            K = 64
+            steps = S if sc.kind != "decode" else 1
+            mix += bwd * 2.0 * B * steps * (cfg.d_model // 64) * K * K * 3
+    return base + mix
+
+
+def active_params(cfg) -> float:
+    """Parameter count active per token (MoE counts top_k experts)."""
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    hd = cfg.hd
+    emb = V * d * (1 if cfg.tie_embeddings else 2)
+    per_layer = 0.0
+    kinds = cfg.pattern_for_layers()
+    for i, kind in enumerate(kinds):
+        if kind in ("attn", "local", "xattn"):
+            if cfg.mla is not None:
+                m = cfg.mla
+                qk = m.qk_nope_dim + m.qk_rope_dim
+                per_layer += (d * m.q_lora + m.q_lora * cfg.n_heads * qk
+                              + d * (m.kv_lora + m.qk_rope_dim)
+                              + m.kv_lora * cfg.n_heads *
+                              (m.qk_nope_dim + m.v_head_dim)
+                              + cfg.n_heads * m.v_head_dim * d)
+            else:
+                per_layer += (cfg.n_heads * hd * d * 2
+                              + cfg.n_kv_heads * hd * d * 2)
+            if kind == "xattn":
+                per_layer += (cfg.n_heads * hd * d * 2
+                              + cfg.n_kv_heads * hd * d * 2)
+        elif kind == "rglru":
+            per_layer += 7 * d * d / 1  # in/gate/out + gates (approx exact)
+        elif kind == "rwkv":
+            per_layer += 5 * d * d + 2 * d * cfg.d_ff
+        # ffn
+        if kind != "rwkv":
+            if cfg.moe is not None and i >= cfg.moe.first_dense:
+                mo = cfg.moe
+                per_layer += 3 * d * mo.d_expert * mo.top_k
+                per_layer += 3 * d * mo.n_shared * mo.d_shared
+                per_layer += d * mo.n_experts  # router
+            elif cfg.moe is not None and i < cfg.moe.first_dense:
+                per_layer += 3 * d * cfg.moe.d_first_dense
+            else:
+                mult = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+                per_layer += mult * d * cfg.d_ff
+    enc = 0.0
+    if cfg.encdec:
+        enc = cfg.n_enc_layers * (4 * d * d + (2 if cfg.mlp == "gelu" else 3)
+                                  * d * cfg.d_ff)
+    return emb + per_layer + enc
+
+
+def total_params(cfg) -> float:
+    """All parameters (MoE counts every expert)."""
+    if cfg.moe is None:
+        return active_params(cfg)
+    mo = cfg.moe
+    d = cfg.d_model
+    n_moe_layers = cfg.n_layers - mo.first_dense
+    delta = 3 * d * mo.d_expert * (mo.n_experts - mo.top_k) * n_moe_layers
+    return active_params(cfg) + delta
+
+
+def analytic_memory(cfg, sc, n_dev: int, multi_pod: bool) -> dict:
+    """Per-device HBM bytes, assuming the TPU fused-attention emitter (the
+    XLA-CPU backend materializes full attention logits, so its temp report
+    is an upper bound — this is the fits-proof for the 16 GiB v5e budget)."""
+    n_total = total_params(cfg)
+    d_model = cfg.d_model
+    model_shards = 16  # model axis extent on both meshes
+    data_shards = n_dev // model_shards
+    p_bytes = 2 * n_total / n_dev          # bf16 params, fully sharded
+    opt_bytes = 8 * n_total / n_dev        # fp32 m+v
+    grad_bytes = 4 * n_total / n_dev       # fp32 grads (transient)
+    act = cache = 0.0
+    if sc.kind == "train":
+        toks_per_dev = sc.global_batch * sc.seq_len / data_shards
+        L = cfg.n_layers
+        act = toks_per_dev * d_model * 2 * (L + 2)   # remat boundaries bf16
+        act += toks_per_dev * cfg.vocab * 4 / model_shards  # fp32 logits
+    elif sc.kind == "prefill":
+        toks_per_dev = sc.global_batch * sc.seq_len / data_shards
+        act = toks_per_dev * d_model * 2 * (cfg.n_layers + 2)
+        cache = _cache_bytes(cfg, sc) / n_dev
+    else:
+        cache = _cache_bytes(cfg, sc) / n_dev
+        act = sc.global_batch * d_model * 2 * cfg.n_layers
+    total = p_bytes + opt_bytes * (sc.kind == "train") \
+        + grad_bytes * (sc.kind == "train") + act + cache
+    return {"params_B": int(p_bytes), "opt_B": int(opt_bytes),
+            "act_B": int(act), "cache_B": int(cache),
+            "total_per_dev_B": int(total),
+            "fits_16GiB": bool(total < 16 * 2 ** 30)}
+
+
+def _cache_bytes(cfg, sc) -> float:
+    B, S = sc.global_batch, sc.seq_len
+    per_tok = 0.0
+    kinds = cfg.pattern_for_layers()
+    for kind in kinds:
+        if kind == "attn" or kind == "xattn":
+            if cfg.mla is not None:
+                per_tok += 2 * (cfg.mla.kv_lora + cfg.mla.qk_rope_dim)
+            else:
+                per_tok += 2 * 2 * cfg.n_kv_heads * cfg.hd
+        elif kind == "local":
+            w = min(cfg.window or S, S)
+            per_tok += 2 * 2 * cfg.n_kv_heads * cfg.hd * (w / S)
+        elif kind in ("rglru", "rwkv"):
+            pass  # O(1) state per sequence, counted below
+    state = 0.0
+    for kind in kinds:
+        if kind == "rglru":
+            state += 4 * cfg.d_model * 2
+        elif kind == "rwkv":
+            state += (cfg.d_model // 64) * 64 * 64 * 4 + 2 * cfg.d_model * 4
+    return B * S * per_tok + B * state
+
+
+def roofline_terms(res: dict, cfg, sc, n_dev: int) -> dict:
+    cost = res.get("cost_corrected") or res.get("cost", {})
+    if "error" in cost:
+        cost = res.get("cost", {})
+    coll = res.get("collectives", {})
+    hlo_flops = cost.get("flops", 0.0)
+    hlo_bytes = cost.get("bytes_accessed", 0.0)
+    wire = coll.get("wire_bytes", 0) if isinstance(coll, dict) else 0
+    mf = model_flops(cfg, sc)
+    terms = {
+        "compute_s": hlo_flops / PEAK_FLOPS,
+        "memory_s": hlo_bytes / HBM_BW,
+        "collective_s": wire / ICI_BW,
+        "model_flops_total": mf,
+        "model_flops_per_dev": mf / n_dev,
+        "hlo_flops_per_dev": hlo_flops,
+        "useful_flops_ratio": (mf / n_dev) / hlo_flops if hlo_flops else None,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["bottleneck"] = dom.replace("_s", "")
+    return terms

@@ -1,0 +1,35 @@
+"""Serving driver: host-mesh sharded decode loop (see examples/serve_lm.py
+for the single-host version)."""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax
+
+from repro.configs import get_config, get_reduced
+from repro.models import model_init
+from repro.serve.serve_step import Request, Server
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    params, _ = model_init(jax.random.PRNGKey(0), cfg)
+    srv = Server(cfg, params, slots=4, cache_len=128)
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        srv.submit(Request(prompt=rng.integers(0, cfg.vocab, 12)
+                           .astype(np.int32), max_new=args.max_new))
+    done = srv.run(max_steps=256)
+    print(f"served {len(done)}/{args.requests} requests")
+
+
+if __name__ == "__main__":
+    main()

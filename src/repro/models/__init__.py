@@ -1,0 +1,7 @@
+from repro.models import attention, layers, moe, recurrent, transformer
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      loss_fn, model_init, prefill)
+
+__all__ = ["attention", "layers", "moe", "recurrent", "transformer",
+           "decode_step", "forward", "init_cache", "loss_fn", "model_init",
+           "prefill"]

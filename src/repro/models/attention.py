@@ -1,0 +1,290 @@
+"""Attention variants: GQA/MQA (RoPE, optional bias/qk-norm/sliding window),
+DeepSeek-V2 MLA (latent KV), and encoder-decoder cross-attention.  Each has a
+full-sequence path (train/prefill) and a single-step decode path over a KV
+cache.  Decode shards the KV sequence axis when batch=1 (long-context): the
+partial-softmax (numerator, denominator) reduction is associative, so XLA
+turns the final combine into one small psum — flash-decode style.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models import layers as L
+
+NEG_INF = -2.3819763e38
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, S, n_kv, hd)  [or latent (B, S, kv_lora+rope) MLA]
+    v: jnp.ndarray
+
+
+# --------------------------------------------------------------------------- #
+# GQA
+# --------------------------------------------------------------------------- #
+def gqa_init(key, cfg: ModelConfig, dtype):
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["q"], s["q"] = L.dense_init(ks[0], d, cfg.n_heads * hd, "embed",
+                                  "q_heads", dtype, bias=cfg.qkv_bias)
+    p["k"], s["k"] = L.dense_init(ks[1], d, cfg.n_kv_heads * hd, "embed",
+                                  "kv_heads", dtype, bias=cfg.qkv_bias)
+    p["v"], s["v"] = L.dense_init(ks[2], d, cfg.n_kv_heads * hd, "embed",
+                                  "kv_heads", dtype, bias=cfg.qkv_bias)
+    p["o"], s["o"] = L.dense_init(ks[3], cfg.n_heads * hd, d, "q_heads",
+                                  "embed", dtype)
+    if cfg.qk_norm:
+        p["qn"], s["qn"] = L.norm_init("rmsnorm", hd, dtype)
+        p["kn"], s["kn"] = L.norm_init("rmsnorm", hd, dtype)
+    return p, s
+
+
+def _mask(Tq: int, Tk: int, q_off, window: int | None):
+    qpos = q_off + jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def _sdpa(q, k, v, mask, scale):
+    # q: (B,Tq,H,D), k/v: (B,Tk,Hkv,D) — grouped heads broadcast
+    B, Tq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qh = q.reshape(B, Tq, Hkv, G, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(B, Tq, H, D)
+
+
+def gqa_apply(p, cfg: ModelConfig, x, positions, window=None,
+              cache: KVCache | None = None, update_slice: int | None = None,
+              causal: bool = True):
+    """Full-sequence when cache is None; cached prefill/decode otherwise
+    (x is (B, T, d) written at offset ``update_slice`` into the cache)."""
+    B, T, d = x.shape
+    hd = cfg.hd
+    q = L.dense(p["q"], x).reshape(B, T, cfg.n_heads, hd)
+    k = L.dense(p["k"], x).reshape(B, T, cfg.n_kv_heads, hd)
+    v = L.dense(p["v"], x).reshape(B, T, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = L.apply_norm("rmsnorm", p["qn"], q)
+        k = L.apply_norm("rmsnorm", p["kn"], k)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    scale = 1.0 / math.sqrt(hd)
+
+    if cache is None:
+        if causal:
+            mask = _mask(T, T, 0, window)
+        else:
+            mask = jnp.ones((T, T), bool)  # bidirectional (encoder)
+        out = _sdpa(q, k, v, mask, scale)
+        new_cache = KVCache(k=k, v=v)
+    else:
+        S = cache.k.shape[1]
+        if window is not None and S <= window and T == 1:
+            # ring-buffer window cache (local layers): O(window) memory
+            # instead of O(seq).  Slot s holds position p - ((p - s) mod S);
+            # all resident positions are inside the window by construction,
+            # only warm-up slots (pos < 0) need masking.
+            slot = jnp.mod(update_slice, S)
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), slot, axis=1)
+            s_idx = jnp.arange(S)[None, :]
+            slot_pos = update_slice - jnp.mod(update_slice - s_idx, S)
+            mask = (slot_pos >= 0) & (slot_pos > update_slice - window)
+            out = _sdpa(q, kc.astype(q.dtype), vc.astype(q.dtype),
+                        jnp.broadcast_to(mask, (T, S)), scale)
+            new_cache = KVCache(k=kc, v=vc)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), update_slice, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), update_slice, axis=1)
+            # causal-within-prompt: query row t sits at update_slice + t
+            mask = _mask(T, S, update_slice, window)
+            out = _sdpa(q, kc.astype(q.dtype), vc.astype(q.dtype), mask,
+                        scale)
+            new_cache = KVCache(k=kc, v=vc)
+    y = L.dense(p["o"], out.reshape(B, T, cfg.n_heads * hd))
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# DeepSeek-V2 MLA
+# --------------------------------------------------------------------------- #
+def mla_init(key, cfg: ModelConfig, dtype):
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 7)
+    p, s = {}, {}
+    p["q_a"], s["q_a"] = L.dense_init(ks[0], d, m.q_lora, "embed", "lora",
+                                      dtype)
+    p["q_an"], s["q_an"] = L.norm_init("rmsnorm", m.q_lora, dtype)
+    p["q_b"], s["q_b"] = L.dense_init(ks[1], m.q_lora, H * qk, "lora",
+                                      "q_heads", dtype)
+    # kv compression: latent (kv_lora) + decoupled rope key (qk_rope_dim)
+    p["kv_a"], s["kv_a"] = L.dense_init(ks[2], d, m.kv_lora + m.qk_rope_dim,
+                                        "embed", "lora", dtype)
+    p["kv_an"], s["kv_an"] = L.norm_init("rmsnorm", m.kv_lora, dtype)
+    p["kv_b"], s["kv_b"] = L.dense_init(
+        ks[3], m.kv_lora, H * (m.qk_nope_dim + m.v_head_dim), "lora",
+        "q_heads", dtype)
+    p["o"], s["o"] = L.dense_init(ks[4], H * m.v_head_dim, d, "q_heads",
+                                  "embed", dtype)
+    return p, s
+
+
+def mla_apply_absorbed(p, cfg: ModelConfig, x, positions, cache: KVCache,
+                       update_slice):
+    """Absorbed-matrix MLA decode (beyond-paper optimization, §Perf).
+
+    Instead of decompressing the whole latent cache through kv_b each step
+    (O(S * kv_lora * H * (nope+v)) FLOPs/token), fold W_uk into the query
+    and W_uv into the attention output:
+        q_lat[h]   = q_nope[h] @ W_uk[h]^T          (kv_lora per head)
+        score[h,s] = q_lat[h] . latent[s] + q_rope[h] . k_rope[s]
+        ctx_lat[h] = sum_s p[h,s] latent[s]
+        out[h]     = ctx_lat[h] @ W_uv[h]
+    FLOPs/token drop to O(H * S * kv_lora) — the cache is only ever read at
+    its compressed width, which is the entire point of MLA.
+    """
+    m: MLAConfig = cfg.mla
+    B, T, d = x.shape
+    assert T == 1, "absorbed path is the single-token decode step"
+    H = cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    q = L.dense(p["q_b"], L.apply_norm("rmsnorm", p["q_an"],
+                                       L.dense(p["q_a"], x)))
+    q = q.reshape(B, T, H, qk)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = L.dense(p["kv_a"], x)
+    latent_new = L.apply_norm("rmsnorm", p["kv_an"], kv_a[..., :m.kv_lora])
+    k_rope_new = L.apply_rope(kv_a[..., None, m.kv_lora:], positions,
+                              cfg.rope_theta)[..., 0, :]
+    lat_cat = jnp.concatenate([latent_new, k_rope_new], -1)
+    lat_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, lat_cat.astype(cache.k.dtype), update_slice, axis=1)
+    new_cache = KVCache(k=lat_cache, v=cache.v)
+    S = lat_cache.shape[1]
+    lat_all = lat_cache.astype(q.dtype)
+    latent_all = lat_all[..., :m.kv_lora]               # (B,S,kv_lora)
+    krope_all = lat_all[..., m.kv_lora:]                # (B,S,rope)
+
+    # fold W_uk (the k_nope decompression) into the query
+    w_kv_b = p["kv_b"]["w"].reshape(m.kv_lora, H, m.qk_nope_dim + m.v_head_dim)
+    w_uk = w_kv_b[..., :m.qk_nope_dim]                  # (kv_lora,H,nope)
+    w_uv = w_kv_b[..., m.qk_nope_dim:]                  # (kv_lora,H,v)
+    q_lat = jnp.einsum("bthd,lhd->bthl", q_nope, w_uk)  # (B,1,H,kv_lora)
+
+    scale = 1.0 / math.sqrt(qk)
+    lg = (jnp.einsum("bthl,bsl->bhts", q_lat.astype(jnp.float32),
+                     latent_all.astype(jnp.float32))
+          + jnp.einsum("bthd,bsd->bhts", q_rope.astype(jnp.float32),
+                       krope_all.astype(jnp.float32))) * scale
+    mask = _mask(T, S, update_slice, None)
+    lg = jnp.where(mask[None, None], lg, NEG_INF)
+    pr = jax.nn.softmax(lg, axis=-1)
+    ctx_lat = jnp.einsum("bhts,bsl->bthl", pr.astype(latent_all.dtype),
+                         latent_all)                    # (B,1,H,kv_lora)
+    out = jnp.einsum("bthl,lhv->bthv", ctx_lat, w_uv)   # (B,1,H,v)
+    y = L.dense(p["o"], out.reshape(B, T, H * m.v_head_dim))
+    return y, new_cache
+
+
+def mla_apply(p, cfg: ModelConfig, x, positions,
+              cache: KVCache | None = None, update_slice: int | None = None):
+    """MLA with latent-KV cache: cache.k stores the (kv_lora + rope) latent
+    per token — the 576-dim compressed cache that is MLA's point."""
+    if cache is not None and x.shape[1] == 1 and getattr(
+            cfg, "mla_absorb", True):
+        return mla_apply_absorbed(p, cfg, x, positions, cache, update_slice)
+    m: MLAConfig = cfg.mla
+    B, T, d = x.shape
+    H = cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    q = L.dense(p["q_b"], L.apply_norm("rmsnorm", p["q_an"],
+                                       L.dense(p["q_a"], x)))
+    q = q.reshape(B, T, H, qk)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = L.dense(p["kv_a"], x)                       # (B,T,kv_lora+rope)
+    latent = L.apply_norm("rmsnorm", p["kv_an"], kv_a[..., :m.kv_lora])
+    k_rope = L.apply_rope(kv_a[..., None, m.kv_lora:], positions,
+                          cfg.rope_theta)              # (B,T,1,rope)
+    lat_cat = jnp.concatenate([latent, k_rope[..., 0, :]], -1)
+
+    if cache is not None:
+        lat_cat = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, lat_cat.astype(cache.k.dtype), update_slice, axis=1)
+        new_cache = KVCache(k=lat_cat, v=cache.v)
+        S = lat_cat.shape[1]
+        mask = _mask(T, S, update_slice, None)
+    else:
+        new_cache = KVCache(k=lat_cat, v=lat_cat[..., :0])
+        S = T
+        mask = _mask(T, T, 0, None)
+    lat_all = lat_cat.astype(q.dtype)
+    latent_all, krope_all = lat_all[..., :m.kv_lora], lat_all[..., m.kv_lora:]
+    kv = L.dense(p["kv_b"], latent_all).reshape(
+        B, S, H, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = kv[..., :m.qk_nope_dim], kv[..., m.qk_nope_dim:]
+
+    scale = 1.0 / math.sqrt(qk)
+    lg = (jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(jnp.float32),
+                     k_nope.astype(jnp.float32))
+          + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                       krope_all.astype(jnp.float32))) * scale
+    lg = jnp.where(mask[None, None], lg, NEG_INF)
+    pr = jax.nn.softmax(lg, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pr.astype(v.dtype), v)
+    y = L.dense(p["o"], out.reshape(B, T, H * m.v_head_dim))
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# Cross-attention (enc-dec)
+# --------------------------------------------------------------------------- #
+def cross_init(key, cfg: ModelConfig, dtype):
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["q"], s["q"] = L.dense_init(ks[0], d, cfg.n_heads * hd, "embed",
+                                  "q_heads", dtype)
+    p["k"], s["k"] = L.dense_init(ks[1], d, cfg.n_kv_heads * hd, "embed",
+                                  "kv_heads", dtype)
+    p["v"], s["v"] = L.dense_init(ks[2], d, cfg.n_kv_heads * hd, "embed",
+                                  "kv_heads", dtype)
+    p["o"], s["o"] = L.dense_init(ks[3], cfg.n_heads * hd, d, "q_heads",
+                                  "embed", dtype)
+    return p, s
+
+
+def cross_apply(p, cfg: ModelConfig, x, enc_out):
+    B, T, d = x.shape
+    S = enc_out.shape[1]
+    hd = cfg.hd
+    q = L.dense(p["q"], x).reshape(B, T, cfg.n_heads, hd)
+    k = L.dense(p["k"], enc_out).reshape(B, S, cfg.n_kv_heads, hd)
+    v = L.dense(p["v"], enc_out).reshape(B, S, cfg.n_kv_heads, hd)
+    mask = jnp.ones((T, S), bool)
+    out = _sdpa(q, k, v, mask, 1.0 / math.sqrt(hd))
+    return L.dense(p["o"], out.reshape(B, T, cfg.n_heads * hd))

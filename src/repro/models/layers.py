@@ -1,0 +1,140 @@
+"""Functional layer library: every init returns (params, logical-axis specs).
+
+Params are plain pytrees (nested dicts of jnp arrays).  The parallel `specs`
+tree holds tuples of *logical axis names* per array; distributed/sharding.py
+maps logical names -> mesh axes per mesh/shape (MaxText-style rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _norm_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, in_axis: str, out_axis: str,
+               dtype, bias: bool = False, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    s = {"w": (in_axis, out_axis)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        s["b"] = (out_axis,)
+    return p, s
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    w = (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+    return {"w": w}, {"w": ("vocab", "embed")}
+
+
+def embed_lookup(p, ids):
+    return p["w"][ids]
+
+
+def norm_init(kind: str, d: int, dtype):
+    if kind == "nonparam_ln":       # OLMo: no learned affine
+        return {}, {}
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": ("embed",)}
+
+
+def apply_norm(kind: str, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        if p:
+            y = y * p["scale"].astype(jnp.float32)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if p:
+            y = y * p["scale"].astype(jnp.float32)
+    elif kind == "nonparam_ln":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(kind)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary embeddings
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., T, H, D); positions: (..., T)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, D/2)
+    cos = jnp.cos(ang)[..., None, :]                   # (..., T, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------------- #
+def mlp_init(key, kind: str, d: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        p, s = {}, {}
+        p["gate"], s["gate"] = dense_init(ks[0], d, d_ff, "embed", "ffn", dtype)
+        p["up"], s["up"] = dense_init(ks[1], d, d_ff, "embed", "ffn", dtype)
+        p["down"], s["down"] = dense_init(ks[2], d_ff, d, "ffn", "embed", dtype)
+        return p, s
+    p, s = {}, {}
+    p["up"], s["up"] = dense_init(ks[0], d, d_ff, "embed", "ffn", dtype)
+    p["down"], s["down"] = dense_init(ks[1], d_ff, d, "ffn", "embed", dtype)
+    return p, s
+
+
+def mlp_apply(kind: str, p, x):
+    if kind == "swiglu":
+        return dense(p["down"], jax.nn.silu(dense(p["gate"], x))
+                     * dense(p["up"], x))
+    if kind == "geglu":
+        return dense(p["down"], jax.nn.gelu(dense(p["gate"], x))
+                     * dense(p["up"], x))
+    return dense(p["down"], jax.nn.gelu(dense(p["up"], x)))
+
+
+# --------------------------------------------------------------------------- #
+# spec/tree utilities
+# --------------------------------------------------------------------------- #
+def stack_params(plist):
+    """Stack per-layer param trees along a new leading 'layers' axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *plist)
+
+
+def stack_specs(spec):
+    """Prepend the 'layers' logical axis to every spec tuple."""
+    return jax.tree.map(lambda s: ("layers",) + tuple(s), spec,
+                        is_leaf=lambda s: isinstance(s, tuple))
+
+
+def abstract_init(init_fn: Callable, *args, **kwargs):
+    """eval_shape an init so dry-runs never allocate real parameters."""
+    return jax.eval_shape(init_fn, *args, **kwargs)

@@ -1,0 +1,191 @@
+"""Recurrent blocks: RecurrentGemma's RG-LRU and RWKV6 (Finch) time/channel
+mix.  Full-sequence paths use associative scans (XLA); decode paths carry
+O(1) state.  The Pallas kernels (kernels/rglru.py, kernels/wkv6.py) are the
+TPU-target implementations of the same math (validated against these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+C_RGLRU = 8.0
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU recurrent block (RecurrentGemma)
+# --------------------------------------------------------------------------- #
+def rglru_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["in_x"], s["in_x"] = L.dense_init(ks[0], d, d, "embed", "ffn", dtype)
+    p["in_g"], s["in_g"] = L.dense_init(ks[1], d, d, "embed", "ffn", dtype)
+    p["conv_w"] = (jax.random.normal(ks[2], (4, d), jnp.float32)
+                   * 0.02).astype(dtype)
+    s["conv_w"] = ("conv", "ffn")
+    p["gate_a"], s["gate_a"] = L.dense_init(ks[3], d, d, "ffn", "ffn", dtype,
+                                            bias=True)
+    p["gate_x"], s["gate_x"] = L.dense_init(ks[4], d, d, "ffn", "ffn", dtype,
+                                            bias=True)
+    lam = jnp.log(jnp.expm1(jnp.linspace(0.9, 0.999, d)))  # softplus^-1(a)
+    p["log_a"] = lam.astype(jnp.float32)
+    s["log_a"] = ("ffn",)
+    p["out"], s["out"] = L.dense_init(ks[5], d, d, "ffn", "embed", dtype)
+    return p, s
+
+
+def _causal_conv(w, x, state=None):
+    """width-4 depthwise causal conv; state (B, 3, D) for decode."""
+    K = w.shape[0]
+    if state is None:
+        pads = jnp.zeros_like(x[:, : K - 1])
+        xp = jnp.concatenate([pads, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return out, new_state
+
+
+def rglru_apply(p, cfg: ModelConfig, x, state=None):
+    """state = (conv_state (B,3,D), h (B,D)) for decode; None for train."""
+    gate_branch = jax.nn.gelu(L.dense(p["in_g"], x))
+    xb = L.dense(p["in_x"], x)
+    conv_state = None if state is None else state[0]
+    xb, new_conv = _causal_conv(p["conv_w"], xb, conv_state)
+
+    r = jax.nn.sigmoid(L.dense(p["gate_a"], xb).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.dense(p["gate_x"], xb))
+    log_a = -C_RGLRU * r * jax.nn.softplus(p["log_a"])  # log a_t  (<0)
+    a = jnp.exp(log_a).astype(x.dtype)
+    gated_x = i * xb
+
+    h0 = None if state is None else state[1].astype(x.dtype)
+    h = _lin_rec_scan(a, gated_x, h0)
+    new_h = h[:, -1]
+    y = L.dense(p["out"], h * gate_branch)
+    return y, (new_conv, new_h)
+
+
+def _lin_rec_scan(a, x, h0=None):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) x_t via associative scan over T,
+    with optional initial state h0 folded in as h_t += (prod a_1..t) h0."""
+    mult = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0))
+
+    def op(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    cum_a, h = jax.lax.associative_scan(op, (a, mult * x), axis=1)
+    if h0 is not None:
+        h = h + cum_a * h0[:, None]
+    return h
+
+
+# --------------------------------------------------------------------------- #
+# RWKV6 block (time-mix + channel-mix)
+# --------------------------------------------------------------------------- #
+def rwkv6_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H = d // 64                    # head size 64 (RWKV convention)
+    K = 64
+    ks = jax.random.split(key, 10)
+    p, s = {}, {}
+    for i, nm in enumerate(("r", "k", "v", "g")):
+        p[nm], s[nm] = L.dense_init(ks[i], d, d, "embed", "ffn", dtype)
+        p[f"mu_{nm}"] = jnp.full((d,), 0.5, dtype)
+        s[f"mu_{nm}"] = ("embed",)
+    p["w_lora_a"], s["w_lora_a"] = L.dense_init(ks[4], d, 64, "embed",
+                                                "lora", dtype)
+    p["w_lora_b"], s["w_lora_b"] = L.dense_init(ks[5], 64, d, "lora",
+                                                "ffn", dtype)
+    p["mu_w"] = jnp.full((d,), 0.5, dtype)
+    s["mu_w"] = ("embed",)
+    p["w_base"] = jnp.full((d,), -5.0, jnp.float32)
+    s["w_base"] = ("ffn",)
+    p["u"] = (jax.random.normal(ks[6], (H, K), jnp.float32) * 0.1)
+    s["u"] = ("heads", "head_dim")
+    p["out"], s["out"] = L.dense_init(ks[7], d, d, "ffn", "embed", dtype)
+    p["ln_x"], s["ln_x"] = L.norm_init("layernorm", d, dtype)
+    # channel-mix
+    p["cm_k"], s["cm_k"] = L.dense_init(ks[8], d, cfg.d_ff, "embed", "ffn",
+                                        dtype)
+    p["cm_v"], s["cm_v"] = L.dense_init(ks[9], cfg.d_ff, d, "ffn", "embed",
+                                        dtype)
+    p["mu_cm"] = jnp.full((d,), 0.5, dtype)
+    s["mu_cm"] = ("embed",)
+    return p, s
+
+
+def _token_shift(x, prev=None):
+    """shift(x)_t = x_{t-1}; ``prev`` (B, D) is the last token of the
+    previous segment (decode/chunked-prefill state)."""
+    if prev is None:
+        first = jnp.zeros_like(x[:, :1])
+    else:
+        first = prev[:, None].astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _wkv6_with_state(r, k, v, w, u, s0):
+    """lax.scan WKV6 that threads an explicit (B,H,K,K) state (prefill and
+    decode paths; the stateless train path uses kernels/ref.wkv6_ref)."""
+    B, T, H, K = r.shape
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                     # (B,H,K) each
+        decay = jnp.exp(-jnp.exp(wt.astype(jnp.float32)))
+        kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32),
+                        vt.astype(jnp.float32))
+        o = jnp.einsum("bhk,bhkv->bhv", rt.astype(jnp.float32),
+                       s + u[None, :, :, None] * kv)
+        return decay[..., None] * s + kv, o
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))  # (T,B,H,K)
+    s_fin, o = jax.lax.scan(step, s0, xs)
+    return o.transpose(1, 0, 2, 3), s_fin       # (B,T,H,K), (B,H,K,K)
+
+
+def rwkv6_time_mix(p, cfg: ModelConfig, x, state=None):
+    """state = (x_prev (B,D), wkv_state (B,H,K,K)) for decode/prefill."""
+    B, T, d = x.shape
+    H, K = d // 64, 64
+    prev = None if state is None else state[0]
+    xx = _token_shift(x, prev)
+
+    def mix(nm):
+        return x + (xx - x) * p[f"mu_{nm}"]
+
+    r = L.dense(p["r"], mix("r")).reshape(B, T, H, K)
+    k = L.dense(p["k"], mix("k")).reshape(B, T, H, K)
+    v = L.dense(p["v"], mix("v")).reshape(B, T, H, K)
+    g = jax.nn.silu(L.dense(p["g"], mix("g")))
+    w = (p["w_base"]
+         + L.dense(p["w_lora_b"],
+                   jnp.tanh(L.dense(p["w_lora_a"], mix("w")))).astype(
+                       jnp.float32))
+    w = w.reshape(B, T, H, K).astype(x.dtype)
+
+    if state is None:
+        from repro.kernels.ref import wkv6_ref
+        o = wkv6_ref(r, k, v, w, p["u"].astype(x.dtype))
+        new_wkv = None  # stateless training path
+    else:
+        s0 = state[1].astype(jnp.float32)
+        o, new_wkv = _wkv6_with_state(r, k, v, w,
+                                      p["u"].astype(jnp.float32), s0)
+        o = o.astype(x.dtype)
+    o = o.reshape(B, T, d)
+    o = L.apply_norm("layernorm", p["ln_x"], o)
+    y = L.dense(p["out"], o * g)
+    return y, (x[:, -1], new_wkv)
+
+
+def rwkv6_channel_mix(p, cfg: ModelConfig, x, state=None):
+    xx = _token_shift(x, state)
+    xk = x + (xx - x) * p["mu_cm"]
+    k = jnp.square(jax.nn.relu(L.dense(p["cm_k"], xk)))
+    return L.dense(p["cm_v"], k), x[:, -1]

@@ -1,0 +1,448 @@
+"""Model assembly for all assigned architectures.
+
+One generic decoder (optionally encoder-decoder) built from typed blocks:
+  attn   — global causal GQA/MLA + FFN (dense or MoE)
+  local  — sliding-window GQA + FFN
+  rglru  — RecurrentGemma recurrent block + FFN
+  rwkv   — RWKV6 time-mix + channel-mix
+
+Layers are executed as jax.lax.scan over *repeating pattern groups* (e.g.
+gemma3's 5 local + 1 global) so the lowered HLO stays one-group-sized
+regardless of depth — essential for 512-way SPMD compile times.  Remainder
+layers (depth % group) and MoE "first dense" layers are unrolled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.distributed.sharding import replicate, shard_activation
+
+
+# --------------------------------------------------------------------------- #
+# blocks
+# --------------------------------------------------------------------------- #
+def block_init(kind: str, key, cfg: ModelConfig, dtype, ffn: str = "dense"):
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    p["n1"], s["n1"] = L.norm_init(cfg.norm, cfg.d_model, dtype)
+    if kind in ("attn", "local", "enc_attn", "xattn"):
+        if cfg.mla is not None and kind in ("attn", "xattn"):
+            p["mix"], s["mix"] = A.mla_init(ks[0], cfg, dtype)
+        else:
+            p["mix"], s["mix"] = A.gqa_init(ks[0], cfg, dtype)
+        if kind == "xattn":
+            p["n_x"], s["n_x"] = L.norm_init(cfg.norm, cfg.d_model, dtype)
+            p["cross"], s["cross"] = A.cross_init(ks[2], cfg, dtype)
+    elif kind == "rglru":
+        p["mix"], s["mix"] = R.rglru_init(ks[0], cfg, dtype)
+    elif kind == "rwkv":
+        p["mix"], s["mix"] = R.rwkv6_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    p["n2"], s["n2"] = L.norm_init(cfg.norm, cfg.d_model, dtype)
+    if kind != "rwkv":  # rwkv's channel-mix lives inside its mix params
+        if ffn == "moe":
+            p["ffn"], s["ffn"] = M.moe_init(ks[1], cfg, dtype)
+        elif ffn.startswith("dense"):
+            d_ff = cfg.d_ff if ffn == "dense" else int(ffn.split(":")[1])
+            p["ffn"], s["ffn"] = L.mlp_init(ks[1], cfg.mlp, cfg.d_model,
+                                            d_ff, dtype)
+    if cfg.post_norms:
+        p["pn1"], s["pn1"] = L.norm_init(cfg.norm, cfg.d_model, dtype)
+        p["pn2"], s["pn2"] = L.norm_init(cfg.norm, cfg.d_model, dtype)
+    return p, s
+
+
+def block_apply(kind: str, p, cfg: ModelConfig, x, positions,
+                state=None, update_slice=None, enc_out=None,
+                ffn: str = "dense"):
+    """Returns (x, new_state, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(cfg.norm, p["n1"], x)
+    if kind in ("attn", "local", "enc_attn", "xattn"):
+        window = cfg.window if kind == "local" else None
+        if cfg.mla is not None and kind in ("attn", "xattn"):
+            y, new_state = A.mla_apply(p["mix"], cfg, h, positions,
+                                       cache=state, update_slice=update_slice)
+        else:
+            causal = kind != "enc_attn"
+            y, new_state = A.gqa_apply(p["mix"], cfg, h, positions,
+                                       window=window, cache=state,
+                                       update_slice=update_slice,
+                                       causal=causal)
+            if not causal:
+                new_state = None
+    elif kind == "rglru":
+        y, new_state = R.rglru_apply(p["mix"], cfg, h, state)
+    elif kind == "rwkv":
+        tm_state = None if state is None else (state[0], state[1])
+        y, tm_new = R.rwkv6_time_mix(p["mix"], cfg, h, tm_state)
+        x = x + y
+        h2 = L.apply_norm(cfg.norm, p["n2"], x)
+        cm_prev = None if state is None else state[2]
+        y2, cm_new = R.rwkv6_channel_mix(p["mix"], cfg, h2, cm_prev)
+        x = x + y2
+        x = shard_activation(x, "btd")
+        new_state = None if state is None else (tm_new[0], tm_new[1], cm_new)
+        return x, new_state, aux
+    else:
+        raise ValueError(kind)
+    if cfg.post_norms:
+        y = L.apply_norm(cfg.norm, p["pn1"], y)
+    x = x + y
+    if kind == "xattn" and enc_out is not None:
+        x = x + A.cross_apply(p["cross"],
+                              cfg, L.apply_norm(cfg.norm, p["n_x"], x),
+                              enc_out)
+    h = L.apply_norm(cfg.norm, p["n2"], x)
+    if ffn == "moe":
+        y, aux = M.moe_apply(p["ffn"], cfg, h)
+    else:
+        y = L.mlp_apply(cfg.mlp, p["ffn"], h)
+    if cfg.post_norms:
+        y = L.apply_norm(cfg.norm, p["pn2"], y)
+    x = x + y
+    x = shard_activation(x, "btd")
+    return x, new_state, aux
+
+
+# --------------------------------------------------------------------------- #
+# layer plan: which layers scan, which unroll
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    head: tuple[tuple[str, str], ...]   # (kind, ffn) unrolled leading layers
+    group: tuple[tuple[str, str], ...]  # repeating scanned group
+    n_groups: int
+    tail: tuple[tuple[str, str], ...]   # unrolled remainder
+
+
+def layer_plan(cfg: ModelConfig, decoder: bool = True) -> LayerPlan:
+    n = cfg.n_layers
+    kinds = cfg.pattern_for_layers(n)
+    if cfg.encdec and decoder:
+        kinds = ["xattn"] * n
+    ffns = []
+    for i in range(n):
+        if cfg.moe is not None:
+            if i < cfg.moe.first_dense:
+                ffns.append(f"dense:{cfg.moe.d_first_dense}")
+            else:
+                ffns.append("moe")
+        else:
+            ffns.append("dense")
+    layers = list(zip(kinds, ffns))
+    head_n = cfg.moe.first_dense if cfg.moe is not None else 0
+    head, rest = tuple(layers[:head_n]), layers[head_n:]
+    g = len(cfg.block_pattern) if not (cfg.encdec and decoder) else 1
+    n_groups = len(rest) // g
+    scanned, tail = rest[: n_groups * g], tuple(rest[n_groups * g:])
+    group = tuple(scanned[:g]) if n_groups else ()
+    return LayerPlan(head=head, group=group, n_groups=n_groups, tail=tail)
+
+
+def _stack_init(key, cfg, plan: LayerPlan, dtype):
+    """Init head/tail unrolled + per-group-position stacked params."""
+    p, s = {"head": [], "tail": []}, {"head": [], "tail": []}
+    keys = jax.random.split(key, len(plan.head) + len(plan.tail) + 1)
+    ki = 0
+    for kind, ffn in plan.head:
+        bp, bs = block_init(kind, keys[ki], cfg, dtype, ffn)
+        p["head"].append(bp)
+        s["head"].append(bs)
+        ki += 1
+    for kind, ffn in plan.tail:
+        bp, bs = block_init(kind, keys[ki], cfg, dtype, ffn)
+        p["tail"].append(bp)
+        s["tail"].append(bs)
+        ki += 1
+    if plan.n_groups:
+        scan_p, scan_s = {}, {}
+        gkeys = jax.random.split(keys[ki], plan.n_groups * len(plan.group))
+        for j, (kind, ffn) in enumerate(plan.group):
+            per = [block_init(kind, gkeys[g * len(plan.group) + j], cfg,
+                              dtype, ffn)
+                   for g in range(plan.n_groups)]
+            scan_p[f"b{j}"] = L.stack_params([pp for pp, _ in per])
+            scan_s[f"b{j}"] = L.stack_specs(per[0][1])
+        p["scan"], s["scan"] = scan_p, scan_s
+    return p, s
+
+
+def _stack_apply(p, cfg, plan: LayerPlan, x, positions, caches=None,
+                 update_slice=None, enc_out=None, remat: bool = True,
+                 unroll: bool = False):
+    """Apply head (unrolled) + scanned groups + tail.  ``caches`` mirrors the
+    param structure; returns (x, new_caches, aux_sum).  ``unroll=True``
+    replaces lax.scan with a python loop (used by the dry-run cost probes,
+    where XLA's HloCostAnalysis counts while bodies only once)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: dict[str, Any] = {"head": [], "tail": []}
+    for i, (kind, ffn) in enumerate(plan.head):
+        st = None if caches is None else caches["head"][i]
+        x, ns, aux = block_apply(kind, p["head"][i], cfg, x, positions, st,
+                                 update_slice, enc_out, ffn)
+        new_caches["head"].append(ns)
+        aux_total += aux
+
+    if plan.n_groups and unroll:
+        new_scan_list = []
+        for g in range(plan.n_groups):
+            params_g = jax.tree.map(lambda a: a[g], p["scan"])
+            cache_g = (None if caches is None else
+                       jax.tree.map(lambda a: a[g], caches["scan"]))
+            new_cache_g = {}
+            for j, (kind, ffn) in enumerate(plan.group):
+                st = None if cache_g is None else cache_g[f"b{j}"]
+                x, ns, aux = block_apply(kind, params_g[f"b{j}"], cfg, x,
+                                         positions, st, update_slice,
+                                         enc_out, ffn)
+                new_cache_g[f"b{j}"] = ns if ns is not None else 0
+                aux_total = aux_total + aux
+            new_scan_list.append(new_cache_g)
+        if caches is not None:
+            new_caches["scan"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs, 0), *new_scan_list)
+        else:
+            new_caches["scan"] = None
+    elif plan.n_groups:
+        def group_body(carry, xs):
+            x, auxc = carry
+            params_g, cache_g = xs
+            new_cache_g = {}
+            for j, (kind, ffn) in enumerate(plan.group):
+                st = None if cache_g is None else cache_g[f"b{j}"]
+                x, ns, aux = block_apply(kind, params_g[f"b{j}"], cfg, x,
+                                         positions, st, update_slice,
+                                         enc_out, ffn)
+                new_cache_g[f"b{j}"] = ns if ns is not None else 0
+                auxc = auxc + aux
+            return (x, auxc), new_cache_g
+
+        body = jax.checkpoint(group_body) if remat else group_body
+        cache_xs = None if caches is None else caches["scan"]
+        if cache_xs is None:
+            (x, aux_total), _ = jax.lax.scan(
+                lambda c, pg: body(c, (pg, None)),
+                (x, aux_total), p["scan"])
+            new_caches["scan"] = None
+        else:
+            (x, aux_total), new_scan = jax.lax.scan(
+                body, (x, aux_total), (p["scan"], cache_xs))
+            new_caches["scan"] = new_scan
+
+    for i, (kind, ffn) in enumerate(plan.tail):
+        st = None if caches is None else caches["tail"][i]
+        x, ns, aux = block_apply(kind, p["tail"][i], cfg, x, positions, st,
+                                 update_slice, enc_out, ffn)
+        new_caches["tail"].append(ns)
+        aux_total += aux
+    return x, new_caches, aux_total
+
+
+# --------------------------------------------------------------------------- #
+# full model
+# --------------------------------------------------------------------------- #
+def model_init(key, cfg: ModelConfig):
+    """Returns (params, specs)."""
+    dtype = cfg.compute_dtype
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    # vocab padded to a TP-divisible multiple (§Perf: granite's 49155-row
+    # table replicated the logits matmul 16x before padding)
+    p["embed"], s["embed"] = L.embed_init(ks[0], cfg.padded_vocab,
+                                          cfg.d_model, dtype)
+    plan = layer_plan(cfg, decoder=True)
+    p["dec"], s["dec"] = _stack_init(ks[1], cfg, plan, dtype)
+    if cfg.encdec:
+        enc_plan = LayerPlan(head=(), group=(("enc_attn", "dense"),),
+                             n_groups=cfg.n_enc_layers, tail=())
+        p["enc"], s["enc"] = _stack_init(ks[2], cfg, enc_plan, dtype)
+        p["enc_norm"], s["enc_norm"] = L.norm_init(cfg.norm, cfg.d_model,
+                                                   dtype)
+    p["final_norm"], s["final_norm"] = L.norm_init(cfg.norm, cfg.d_model,
+                                                   dtype)
+    if not cfg.tie_embeddings:
+        p["head"], s["head"] = L.dense_init(ks[3], cfg.d_model,
+                                            cfg.padded_vocab,
+                                            "embed", "vocab", dtype)
+    return p, s
+
+
+def _encode(p, cfg: ModelConfig, enc_frames, remat=True, unroll=False):
+    enc_plan = LayerPlan(head=(), group=(("enc_attn", "dense"),),
+                         n_groups=cfg.n_enc_layers, tail=())
+    pos = jnp.broadcast_to(jnp.arange(enc_frames.shape[1]),
+                           enc_frames.shape[:2])
+    x, _, _ = _stack_apply(p["enc"], cfg, enc_plan, enc_frames, pos,
+                           remat=remat, unroll=unroll)
+    return L.apply_norm(cfg.norm, p["enc_norm"], x)
+
+
+def _embed_inputs(p, cfg: ModelConfig, batch):
+    # many-token lookups (train/prefill): all-gather the vocab-sharded
+    # table once — GSPMD's one-hot-matmul lowering costs ~2*N*V*D FLOPs
+    # (§Perf).  Few-token lookups (decode) keep the sharded gather.
+    table = p["embed"]["w"]
+    if batch["tokens"].size >= table.shape[0]:
+        table = replicate(table)
+    x = L.embed_lookup({"w": table}, batch["tokens"])
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.modality_stub == "vision" and "stub" in batch:
+        n = batch["stub"].shape[1]
+        x = jnp.concatenate([batch["stub"].astype(x.dtype), x[:, n:]], 1)
+    return x
+
+
+def forward(p, cfg: ModelConfig, batch, remat: bool = True,
+            unroll: bool = False):
+    """Training/prefill forward: returns (logits, aux_loss)."""
+    x = _embed_inputs(p, cfg, batch)
+    x = shard_activation(x, "btd")
+    B, T = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    enc_out = None
+    if cfg.encdec:
+        enc_out = _encode(p, cfg, batch["enc_frames"].astype(x.dtype),
+                          remat=remat, unroll=unroll)
+    plan = layer_plan(cfg, decoder=True)
+    x, _, aux = _stack_apply(p["dec"], cfg, plan, x, positions,
+                             enc_out=enc_out, remat=remat, unroll=unroll)
+    x = L.apply_norm(cfg.norm, p["final_norm"], x)
+    logits = _logits(p, cfg, x)
+    return logits, aux
+
+
+def _logits(p, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        logits = x @ p["embed"]["w"].T
+    else:
+        logits = L.dense(p["head"], x)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    if cfg.padded_vocab != cfg.vocab:
+        # mask padding columns (keeps the vocab dim sharded; slicing would
+        # force a gather)
+        cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        logits = jnp.where(cols < cfg.vocab, logits, -1e30)
+    return logits
+
+
+def loss_fn(p, cfg: ModelConfig, batch, remat: bool = True,
+            unroll: bool = False):
+    logits, aux = forward(p, cfg, batch, remat=remat, unroll=unroll)
+    targets = batch["labels"]
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = targets[:, 1:]
+    logz = jax.nn.logsumexp(logits, -1)
+    # vocab-parallel gold lookup: a masked reduction keeps the vocab dim
+    # sharded (take_along_axis would all-gather the full logits — §Perf)
+    cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                    logits.ndim - 1)
+    gold = jnp.sum(jnp.where(cols == targets[..., None], logits, 0.0), -1)
+    ce = (logz - gold).mean()
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------------- #
+# serving: cache init / prefill / decode
+# --------------------------------------------------------------------------- #
+def _one_cache(kind: str, cfg: ModelConfig, B: int, S: int, dtype,
+               ring: bool = True):
+    hd = cfg.hd
+    if kind in ("attn", "local", "xattn"):
+        if cfg.mla is not None and kind in ("attn", "xattn"):
+            m = cfg.mla
+            lat = jnp.zeros((B, S, m.kv_lora + m.qk_rope_dim), dtype)
+            return A.KVCache(k=lat, v=jnp.zeros((B, S, 0), dtype))
+        if kind == "local" and ring and cfg.window is not None:
+            # ring-buffer cache: O(window) per local layer (§Perf)
+            S = min(S, cfg.window)
+        return A.KVCache(
+            k=jnp.zeros((B, S, cfg.n_kv_heads, hd), dtype),
+            v=jnp.zeros((B, S, cfg.n_kv_heads, hd), dtype))
+    if kind == "rglru":
+        return (jnp.zeros((B, 3, cfg.d_model), dtype),
+                jnp.zeros((B, cfg.d_model), dtype))
+    if kind == "rwkv":
+        H = cfg.d_model // 64
+        return (jnp.zeros((B, cfg.d_model), dtype),
+                jnp.zeros((B, H, 64, 64), dtype),
+                jnp.zeros((B, cfg.d_model), dtype))
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int, dtype=None,
+               ring: bool = True):
+    dtype = dtype or cfg.compute_dtype
+    plan = layer_plan(cfg, decoder=True)
+    caches: dict[str, Any] = {
+        "head": [_one_cache(k, cfg, B, S, dtype, ring) for k, _ in plan.head],
+        "tail": [_one_cache(k, cfg, B, S, dtype, ring) for k, _ in plan.tail],
+    }
+    if plan.n_groups:
+        scan_c = {}
+        for j, (kind, _) in enumerate(plan.group):
+            one = _one_cache(kind, cfg, B, S, dtype, ring)
+            scan_c[f"b{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None],
+                                           (plan.n_groups,) + a.shape), one)
+        caches["scan"] = scan_c
+    else:
+        caches["scan"] = None
+    return caches
+
+
+def decode_step(p, cfg: ModelConfig, caches, tokens, pos, enc_out=None,
+                unroll: bool = False):
+    """One token step: tokens (B, 1), pos scalar int32 position.
+    Returns (logits (B,1,V), new_caches)."""
+    table = p["embed"]["w"]
+    if tokens.size >= table.shape[0]:
+        table = replicate(table)
+    x = L.embed_lookup({"w": table}, tokens)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    B = tokens.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    plan = layer_plan(cfg, decoder=True)
+    x, new_caches, _ = _stack_apply(p["dec"], cfg, plan, x, positions,
+                                    caches=caches, update_slice=pos,
+                                    enc_out=enc_out, remat=False,
+                                    unroll=unroll)
+    x = L.apply_norm(cfg.norm, p["final_norm"], x)
+    return _logits(p, cfg, x), new_caches
+
+
+def prefill(p, cfg: ModelConfig, batch, cache_len: int | None = None,
+            remat: bool = False, unroll: bool = False):
+    """Prefill: forward over the prompt, building caches sized cache_len."""
+    B, T = batch["tokens"].shape
+    S = cache_len or T
+    caches = init_cache(cfg, B, S, ring=False)  # prefill writes T>1 rows
+    x = _embed_inputs(p, cfg, batch)
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    enc_out = None
+    if cfg.encdec:
+        enc_out = _encode(p, cfg, batch["enc_frames"].astype(x.dtype),
+                          remat=remat, unroll=unroll)
+    plan = layer_plan(cfg, decoder=True)
+    x, new_caches, _ = _stack_apply(p["dec"], cfg, plan, x, positions,
+                                    caches=caches,
+                                    update_slice=jnp.asarray(0, jnp.int32),
+                                    enc_out=enc_out, remat=remat,
+                                    unroll=unroll)
+    x = L.apply_norm(cfg.norm, p["final_norm"], x)
+    return _logits(p, cfg, x[:, -1:]), new_caches

@@ -1,0 +1,4 @@
+from repro.serve import serve_step
+from repro.serve.serve_step import Server
+
+__all__ = ["serve_step", "Server"]

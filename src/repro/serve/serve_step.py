@@ -1,0 +1,112 @@
+"""Serving runtime: batched prefill + decode with slot-based continuous
+batching.  A fixed pool of B slots holds independent sequences; finished
+slots are refilled from the queue without stopping the decode loop (the
+static-shape analogue of continuous batching — slot count and cache length
+never change, so one compiled decode_step serves the whole run)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # (T,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    """Single-host reference server; the launch driver wraps it in jit with
+    mesh shardings (batch over data, heads over model)."""
+
+    def __init__(self, cfg: ModelConfig, params, slots: int = 4,
+                 cache_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.cache_len = cache_len
+        self.caches = init_cache(cfg, slots, cache_len)
+        self.pos = np.zeros(slots, np.int32)
+        self.active: list[Request | None] = [None] * slots
+        self.queue: list[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slot(self, s: int):
+        if not self.queue:
+            return
+        req = self.queue.pop(0)
+        T = len(req.prompt)
+        batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+        logits, caches1 = prefill(self.params, self.cfg, batch,
+                                  cache_len=self.cache_len)
+        # splice the single-row cache into slot s of the pooled cache
+        self.caches = jax.tree.map(
+            lambda pool, one: _splice(pool, one, s), self.caches, caches1)
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.out.append(tok)
+        self.active[s] = req
+        self.pos[s] = T
+
+    def step(self):
+        """One decode step across all active slots."""
+        for s in range(self.slots):
+            if self.active[s] is None:
+                self._fill_slot(s)
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s, req in enumerate(self.active):
+            if req is not None and req.out:
+                toks[s, 0] = req.out[-1]
+        # all slots share one position counter per step in this reference
+        # implementation: use per-slot position via max (static-shape safe)
+        pos = int(self.pos.max()) if self.pos.max() > 0 else 0
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(toks),
+            jnp.asarray(pos, jnp.int32))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(int(nxt[s]))
+            self.pos[s] += 1
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.active[s] = None
+
+    def run(self, max_steps: int = 64) -> list[Request]:
+        finished = []
+        for _ in range(max_steps):
+            if not self.queue and all(a is None for a in self.active):
+                break
+            before = [a for a in self.active]
+            self.step()
+            for a in before:
+                if a is not None and a.done:
+                    finished.append(a)
+        return finished
+
+
+def _splice(pool, one, s: int):
+    """Insert a batch-1 cache leaf into slot s of the pooled cache leaf
+    (the batch axis is the first axis where the shapes disagree — scan
+    stacks prepend a layer-group axis shared by both)."""
+    if pool.shape == one.shape:
+        return one.astype(pool.dtype)
+    for ax in range(pool.ndim):
+        if one.shape[ax] == 1 and pool.shape[ax] != 1:
+            return jax.lax.dynamic_update_slice_in_dim(
+                pool, one.astype(pool.dtype), s, axis=ax)
+    return pool

@@ -1,0 +1,5 @@
+from repro.sparse.coo import COOTensor, random_sparse, from_dense
+from repro.sparse.csf import CSFTensor, build_csf
+
+__all__ = ["COOTensor", "random_sparse", "from_dense", "CSFTensor",
+           "build_csf"]

@@ -1,0 +1,114 @@
+"""Compressed Sparse Fiber format, TPU-adapted (paper §2.2).
+
+The classic CSF tree (pointer chasing) is re-laid-out as *flattened
+per-level arrays*, which is the TPU-native form: every sparse loop level p
+becomes three contiguous int32 arrays
+
+  coord[p]  : (nfib_p,)  the p-th coordinate of each level-p fiber
+  parent[p] : (nfib_p,)  index of the enclosing level-(p-1) fiber
+  seg[p]    : (nnz,)     level-p fiber id of every nonzero (for segment_sum)
+
+``nfib_p == nnz^(I1..Ip)`` of the paper.  Traversal becomes vectorized
+gather/segment-reduce instead of a tree walk; ranges of children are
+contiguous because coordinates are lexicographically sorted.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sparse.coo import COOTensor
+
+
+@dataclasses.dataclass
+class CSFTensor:
+    """Flattened CSF: one entry per level, plus leaf values.
+
+    level arrays are indexed 1..order (level p compresses the first p modes);
+    ``fiber_coords[p]`` is the (nfib_p, p) array of unique p-prefixes.
+    """
+
+    coo: COOTensor
+    coord: dict[int, np.ndarray]     # p -> (nfib_p,) p-th coordinate
+    parent: dict[int, np.ndarray]    # p -> (nfib_p,) parent fiber at p-1
+    seg: dict[int, np.ndarray]       # p -> (nnz,) fiber id per nonzero
+    nfib: dict[int, int]             # p -> nnz^(I1..Ip)
+
+    @property
+    def order(self) -> int:
+        return self.coo.order
+
+    @property
+    def nnz(self) -> int:
+        return self.coo.nnz
+
+    @property
+    def values(self) -> np.ndarray:
+        return self.coo.values
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.coo.shape
+
+    def nnz_level(self, p: int) -> int:
+        """nnz^(I1..Ip) (paper §2.2); p=0 -> 1 (the root), p=order -> nnz."""
+        if p == 0:
+            return 1
+        return self.nfib[p]
+
+    def nnz_levels(self) -> dict[int, int]:
+        return {p: self.nnz_level(p) for p in range(self.order + 1)}
+
+    def fiber_coords(self, p: int) -> np.ndarray:
+        """(nfib_p, p) coordinates of each level-p fiber prefix."""
+        out = np.empty((self.nfib[p], p), dtype=np.int32)
+        f = np.arange(self.nfib[p])
+        for lvl in range(p, 0, -1):
+            out[:, lvl - 1] = self.coord[lvl][f]
+            f = self.parent[lvl][f]
+        return out
+
+
+def build_csf(coo: COOTensor) -> CSFTensor:
+    """One-time host-side construction (sparsity is fixed — paper §1)."""
+    coords = coo.coords
+    nnz, order = coords.shape
+    coord: dict[int, np.ndarray] = {}
+    parent: dict[int, np.ndarray] = {}
+    seg: dict[int, np.ndarray] = {}
+    nfib: dict[int, int] = {}
+    prev_seg = np.zeros(nnz, dtype=np.int64)  # level-0: single root fiber
+    for p in range(1, order + 1):
+        # a new level-p fiber starts where the p-prefix changes
+        if nnz == 0:
+            coord[p] = np.zeros(0, np.int32)
+            parent[p] = np.zeros(0, np.int32)
+            seg[p] = np.zeros(0, np.int32)
+            nfib[p] = 0
+            continue
+        changed = np.zeros(nnz, dtype=bool)
+        changed[0] = True
+        changed[1:] = np.any(coords[1:, :p] != coords[:-1, :p], axis=1)
+        fib_id = np.cumsum(changed) - 1
+        starts = np.flatnonzero(changed)
+        coord[p] = coords[starts, p - 1].astype(np.int32)
+        parent[p] = prev_seg[starts].astype(np.int32)
+        seg[p] = fib_id.astype(np.int32)
+        nfib[p] = int(fib_id[-1]) + 1
+        prev_seg = fib_id
+    return CSFTensor(coo=coo, coord=coord, parent=parent, seg=seg, nfib=nfib)
+
+
+def level_segments(csf: CSFTensor, child: int, parentlvl: int) -> np.ndarray:
+    """Segment ids mapping level-``child`` fibers to level-``parentlvl``
+    fibers (child > parentlvl).  parentlvl=0 maps everything to one root."""
+    if child == parentlvl:
+        raise ValueError("child must be deeper than parent")
+    if parentlvl == 0:
+        return np.zeros(csf.nfib[child] if child > 0 else 1, dtype=np.int32)
+    f = np.arange(csf.nfib[child], dtype=np.int64)
+    segs = f
+    for lvl in range(child, parentlvl, -1):
+        segs = csf.parent[lvl][segs]
+    return segs.astype(np.int32)

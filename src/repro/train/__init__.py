@@ -1,0 +1,5 @@
+from repro.train import checkpoint, fault, optimizer, train_step
+from repro.train.train_step import TrainState, init_train_state, make_train_step
+
+__all__ = ["checkpoint", "fault", "optimizer", "train_step", "TrainState",
+           "init_train_state", "make_train_step"]

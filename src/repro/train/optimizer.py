@@ -1,0 +1,66 @@
+"""AdamW with fp32 moments, cosine schedule with linear warmup, global-norm
+clipping.  Params may be bf16 (moments and the update math stay fp32)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+
+@dataclasses.dataclass
+class AdamWState:
+    m: Any
+    v: Any
+    step: jnp.ndarray
+
+
+def init_opt_state(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def lr_schedule(run: RunConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(run.warmup_steps, 1), 1.0)
+    decay = 0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(
+        step / 10_000.0, 1.0)))
+    return run.learning_rate * warm * (0.1 + 0.9 * decay)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(params, grads, state: AdamWState, run: RunConfig,
+                 b1=0.9, b2=0.95, eps=1e-8):
+    grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(run, step.astype(jnp.float32))
+
+    def upd(p, g, m, v):
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mh = m2 / (1 - b1 ** step.astype(jnp.float32))
+        vh = v2 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + eps) + run.weight_decay * p.astype(
+            jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(m=new_m, v=new_v, step=step), {
+        "lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,82 @@
+"""Training step: microbatched grad accumulation (scan) + AdamW + metrics.
+
+The scan-over-microbatches structure is also the compute/communication
+overlap mechanism: FSDP all-gathers for microbatch i+1 are independent of
+microbatch i's compute, so XLA's latency-hiding scheduler pipelines them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.transformer import loss_fn
+from repro.train.optimizer import AdamWState, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+
+    def tree_flatten(self):  # pragma: no cover
+        return (self.params, self.opt), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt), None),
+    lambda _, kids: TrainState(params=kids[0], opt=kids[1]))
+
+jax.tree_util.register_pytree_node(
+    AdamWState,
+    lambda s: ((s.m, s.v, s.step), None),
+    lambda _, kids: AdamWState(m=kids[0], v=kids[1], step=kids[2]))
+
+
+def init_train_state(params) -> TrainState:
+    return TrainState(params=params, opt=init_opt_state(params))
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig):
+    """Returns step(state, batch) -> (state, metrics)."""
+    k = run.microbatches
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, remat=run.remat,
+                              unroll=run.scan_unroll),
+            has_aux=True)(params)
+        return loss, metrics, grads
+
+    def step(state: TrainState, batch):
+        params = state.params
+        if k == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                loss_a, g_a = acc
+                loss, metrics, grads = grads_of(params, mb)
+                g_a = jax.tree.map(jnp.add, g_a, grads)
+                return (loss_a + loss, g_a), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros(()), zeros), micro)
+            loss = loss / k
+            grads = jax.tree.map(lambda g: g / k, grads)
+            metrics = {}
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state.opt, run)
+        m = {"loss": loss, **opt_metrics}
+        return TrainState(params=new_params, opt=new_opt), m
+
+    return step

@@ -1,0 +1,115 @@
+"""Executor equivalence: Algorithm-2 reference interpreter and the
+vectorized JAX engine must both match the dense einsum oracle, for every
+enumerated fully-fused loop nest (property-based)."""
+import itertools
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from repro.core import spec as S
+from repro.core.executor import (CSFArrays, VectorizedExecutor, dense_oracle,
+                                 execute_unfactorized, reference_execute)
+from repro.core.loopnest import enumerate_orders
+from repro.core.paths import min_depth_paths
+from repro.core.planner import plan
+from repro.sparse import build_csf, random_sparse
+
+from tests.test_order_dp import spttn_specs
+
+
+def _factors(spec, rng):
+    out = {}
+    for t in spec.inputs:
+        if not t.is_sparse:
+            out[t.name] = rng.standard_normal(
+                [spec.dims[i] for i in t.indices]).astype(np.float32)
+    return out
+
+
+def _sparse_out_to_dense(spec, csf, vals):
+    dense = np.zeros([spec.dims[i] for i in spec.output.indices])
+    dense[tuple(csf.coo.coords.T)] = np.asarray(vals)
+    return dense
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(spec=spttn_specs(), seed=st.integers(0, 10_000))
+def test_all_engines_match_oracle(spec, seed):
+    rng = np.random.default_rng(seed)
+    shape = tuple(spec.dims[i] for i in spec.sparse_indices)
+    T = random_sparse(shape, density=0.4, seed=seed)
+    hypothesis.assume(T.nnz > 0)
+    csf = build_csf(T)
+    factors = _factors(spec, rng)
+    oracle = dense_oracle(spec, csf, factors)
+    arrays = CSFArrays.from_csf(csf)
+
+    for path in min_depth_paths(spec, max_paths=3, slack=1):
+        for order in itertools.islice(
+                enumerate_orders(path, spec.sparse_indices), 4):
+            ref = reference_execute(spec, path, order, csf, factors)
+            np.testing.assert_allclose(ref, oracle, atol=1e-4, err_msg=str(
+                [str(t) for t in path]) + str(order))
+            out = VectorizedExecutor(spec, path, order)(arrays, factors)
+            if spec.output_is_sparse:
+                out = _sparse_out_to_dense(spec, csf, out)
+            np.testing.assert_allclose(np.asarray(out), oracle, atol=1e-3)
+
+    unf = execute_unfactorized(spec, arrays, factors)
+    if spec.output_is_sparse:
+        unf = _sparse_out_to_dense(spec, csf, unf)
+    np.testing.assert_allclose(np.asarray(unf), oracle, atol=1e-3)
+
+
+def test_planner_plans_execute_for_paper_kernels():
+    rng = np.random.default_rng(1)
+    cases = [
+        S.mttkrp(6, 7, 8, 4),
+        S.ttmc3(6, 7, 8, 4, 3),
+        S.tttp3(6, 7, 8, 4),
+        S.ttmc4(4, 5, 6, 7, 3, 2, 2),
+        S.sddmm(6, 7, 4),
+    ]
+    for spec in cases:
+        shape = tuple(spec.dims[i] for i in spec.sparse_indices)
+        T = random_sparse(shape, density=0.3, seed=3)
+        csf = build_csf(T)
+        factors = _factors(spec, rng)
+        oracle = dense_oracle(spec, csf, factors)
+        pl = plan(spec, nnz_levels=csf.nnz_levels())
+        out = VectorizedExecutor(spec, pl.path, pl.order)(
+            CSFArrays.from_csf(csf), factors)
+        if spec.output_is_sparse:
+            out = _sparse_out_to_dense(spec, csf, out)
+        np.testing.assert_allclose(np.asarray(out), oracle, atol=1e-3,
+                                   err_msg=str(spec))
+
+
+def test_tttc_order6_plan_and_execute():
+    spec = S.tttc6(4, 3)
+    T = random_sparse(tuple(spec.dims[i] for i in spec.sparse_indices),
+                      density=0.02, seed=5)
+    csf = build_csf(T)
+    rng = np.random.default_rng(2)
+    factors = _factors(spec, rng)
+    pl = plan(spec, nnz_levels=csf.nnz_levels(), max_paths=24)
+    out = VectorizedExecutor(spec, pl.path, pl.order)(
+        CSFArrays.from_csf(csf), factors)
+    oracle = dense_oracle(spec, csf, factors)
+    np.testing.assert_allclose(np.asarray(out), oracle, atol=1e-3)
+
+
+def test_empty_and_single_nnz():
+    spec = S.mttkrp(4, 4, 4, 2)
+    rng = np.random.default_rng(0)
+    factors = _factors(spec, rng)
+    from repro.sparse.coo import from_coords
+    T1 = from_coords(np.array([[1, 2, 3]]), np.array([2.0], np.float32),
+                     (4, 4, 4))
+    csf = build_csf(T1)
+    pl = plan(spec, nnz_levels=csf.nnz_levels())
+    out = VectorizedExecutor(spec, pl.path, pl.order)(
+        CSFArrays.from_csf(csf), factors)
+    np.testing.assert_allclose(np.asarray(out),
+                               dense_oracle(spec, csf, factors), atol=1e-4)

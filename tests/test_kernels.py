@@ -1,0 +1,132 @@
+"""Pallas kernel validation: shape/dtype sweeps against the ref.py oracles,
+all in interpret mode (CPU container; TPU is the target)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import ttmc_fiber, ttmc_fiber_layout
+from repro.kernels.util import padded_segment_layout
+from repro.sparse import build_csf, random_sparse
+from repro.sparse.csf import level_segments
+
+
+@pytest.mark.parametrize("shape,density,R,block", [
+    ((12, 10, 8), 0.1, 8, 8),
+    ((30, 17, 9), 0.05, 16, 8),
+    ((6, 6, 6), 0.5, 4, 16),
+])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_mttkrp_sweep(shape, density, R, block, dtype, rng):
+    T = random_sparse(shape, density, seed=7, dtype=dtype)
+    csf = build_csf(T)
+    B = jnp.asarray(rng.standard_normal((shape[1], R)).astype(dtype))
+    C = jnp.asarray(rng.standard_normal((shape[2], R)).astype(dtype))
+    out_ref = ops.mttkrp(csf, B, C, use_pallas=False)
+    out = ops.mttkrp(csf, B, C, block=block, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("shape,R,S,block", [
+    ((10, 9, 8), 8, 4, 8),
+    ((24, 12, 6), 16, 16, 16),
+])
+def test_ttmc_fiber_sweep(shape, R, S, block, rng):
+    T = random_sparse(shape, 0.1, seed=3)
+    csf = build_csf(T)
+    n2 = csf.nfib[2]
+    Xf = jnp.asarray(rng.standard_normal((n2, S)).astype(np.float32))
+    Ug = jnp.asarray(rng.standard_normal((n2, R)).astype(np.float32))
+    lay = ttmc_fiber_layout(csf, block=block)
+    o_pal = ttmc_fiber(Ug, Xf, lay, use_pallas=True)
+    seg = jnp.asarray(level_segments(csf, 2, 1))
+    o_ref = ref.ttmc_fiber_ref(Xf, Ug, seg, csf.nfib[1])
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("shape,R,block", [
+    ((12, 10, 8), 8, 16),
+    ((5, 5, 5), 3, 8),
+])
+def test_tttp_sweep(shape, R, block, rng):
+    T = random_sparse(shape, 0.2, seed=11)
+    csf = build_csf(T)
+    U = jnp.asarray(rng.standard_normal((shape[0], R)).astype(np.float32))
+    V = jnp.asarray(rng.standard_normal((shape[1], R)).astype(np.float32))
+    W = jnp.asarray(rng.standard_normal((shape[2], R)).astype(np.float32))
+    o1 = ops.tttp(csf, U, V, W, use_pallas=False)
+    o2 = ops.tttp(csf, U, V, W, block=block, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o1), atol=1e-4)
+
+
+@pytest.mark.parametrize("E,C,D,F,tiles", [
+    (4, 16, 32, 24, dict(bc=8, bf=8, bd=16)),
+    (2, 8, 8, 8, dict(bc=8, bf=8, bd=8)),
+    (8, 32, 16, 64, dict(bc=16, bf=32, bd=16)),
+])
+@pytest.mark.parametrize("dtype", [np.float32, np.dtype("bfloat16")])
+def test_grouped_matmul_sweep(E, C, D, F, tiles, dtype, rng):
+    x = jnp.asarray(rng.standard_normal((E, C, D)), jnp.dtype(dtype))
+    w = jnp.asarray(rng.standard_normal((E, D, F)), jnp.dtype(dtype))
+    g1 = ops.grouped_matmul(x, w, use_pallas=False)
+    g2 = ops.grouped_matmul(x, w, use_pallas=True, **tiles)
+    atol = 1e-4 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(g2, np.float32),
+                               np.asarray(g1, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("B,T,H,K,chunk", [
+    (2, 16, 2, 8, 8),
+    (1, 32, 4, 16, 16),
+    (3, 8, 1, 4, 8),
+])
+def test_wkv6_sweep(B, T, H, K, chunk, rng):
+    r, k, v, w = (jnp.asarray(rng.standard_normal((B, T, H, K))
+                              .astype(np.float32)) * 0.5 for _ in range(4))
+    u = jnp.asarray(rng.standard_normal((H, K)).astype(np.float32)) * 0.5
+    o1 = ops.wkv6(r, k, v, w, u, use_pallas=False)
+    o2 = ops.wkv6(r, k, v, w, u, use_pallas=True, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o1), atol=1e-3)
+
+
+@pytest.mark.parametrize("B,T,D,chunk", [(2, 16, 8, 8), (1, 64, 32, 16)])
+def test_rglru_sweep(B, T, D, chunk, rng):
+    x = jnp.asarray(rng.standard_normal((B, T, D)).astype(np.float32))
+    a = jnp.asarray(rng.uniform(0.05, 0.98, (B, T, D)).astype(np.float32))
+    o1 = ops.rglru(x, a, use_pallas=False)
+    o2 = ops.rglru(x, a, use_pallas=True, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o1), atol=1e-4)
+
+
+@pytest.mark.parametrize("T,H,D,window,bq", [
+    (32, 2, 16, 12, 8),
+    (64, 1, 32, 64, 16),   # window == T: degenerates to causal
+    (16, 2, 8, 4, 8),
+])
+def test_local_attn_sweep(T, H, D, window, bq, rng):
+    q, k, v = (jnp.asarray(rng.standard_normal((1, T, H, D))
+                           .astype(np.float32)) for _ in range(3))
+    o1 = ops.local_attn(q, k, v, window=window, use_pallas=False)
+    o2 = ops.local_attn(q, k, v, window=window, use_pallas=True,
+                        bq=bq, bk=bq)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o1), atol=1e-3)
+
+
+def test_padded_segment_layout_invariants(rng):
+    import hypothesis
+    # static checks incl. empty segments
+    seg = np.array([0, 0, 2, 2, 2, 5])
+    lay = padded_segment_layout(seg, nseg=6, block=4)
+    assert lay.padded_len % 4 == 0
+    assert lay.block_seg.shape[0] == lay.nblocks
+    # every segment (even empty ones) owns at least one block
+    assert set(lay.block_seg.tolist()) == set(range(6))
+    # mask picks out exactly the real slots, in order
+    real = np.flatnonzero(lay.mask)
+    np.testing.assert_array_equal(lay.gather[real], np.arange(len(seg)))
+    # first-block flags: exactly one per segment
+    assert lay.block_first.sum() == 6

@@ -1,0 +1,101 @@
+"""Algorithm 1 (Theorem 4.9): the DP optimum must equal the exhaustive
+optimum over all valid loop orders, for every tree-separable cost."""
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import spec as S
+from repro.core.cost import (CacheMisses, ConstrainedBlas, MaxBufferDim,
+                             MaxBufferSize)
+from repro.core.enumerate import brute_force_optimal
+from repro.core.order_dp import OrderDP
+from repro.core.paths import min_depth_paths
+
+COSTS = [MaxBufferDim(), MaxBufferSize(), CacheMisses(D=1), CacheMisses(D=2),
+         ConstrainedBlas(2), ConstrainedBlas(1)]
+
+
+@st.composite
+def spttn_specs(draw):
+    """Random small SpTTN: order-2/3 sparse tensor x 1-2 dense factors."""
+    d = draw(st.integers(2, 3))
+    sp_inds = "ijk"[:d]
+    n_dense = draw(st.integers(1, 3))
+    dense_specs = []
+    rank_inds = "rst"
+    for f in range(n_dense):
+        which = draw(st.integers(0, d - 1))
+        has_rank = draw(st.booleans())
+        inds = sp_inds[which] + (rank_inds[f] if has_rank else "")
+        if not has_rank and f > 0:
+            inds = sp_inds[which] + rank_inds[0]  # share r with factor 0
+        dense_specs.append(inds)
+    used_ranks = sorted({c for spec in dense_specs for c in spec
+                         if c in rank_inds})
+    out = sp_inds[0] + "".join(used_ranks)
+    dims = {c: draw(st.integers(2, 5)) for c in sp_inds + "".join(used_ranks)}
+    expr = ",".join([sp_inds] + dense_specs) + "->" + out
+    return S.parse(expr, dims=dims, sparse=0)
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(spec=spttn_specs(), cost_i=st.integers(0, len(COSTS) - 1))
+def test_dp_matches_bruteforce(spec, cost_i):
+    cost = COSTS[cost_i]
+    for path in min_depth_paths(spec, max_paths=4, slack=1):
+        dp = OrderDP(path, cost, spec.dims, spec.sparse_indices).solve()
+        bf_order, bf_cost = brute_force_optimal(path, cost, spec.dims,
+                                                spec.sparse_indices)
+        if bf_cost == float("inf"):
+            # constraint infeasible for every order: DP must agree
+            assert dp.cost == float("inf")
+            continue
+        assert dp.order is not None
+        assert abs(dp.cost - bf_cost) < 1e-9, (
+            f"{type(cost).__name__}: dp={dp.cost} bf={bf_cost}\n"
+            f"dp_order={dp.order}\nbf_order={bf_order}\n"
+            f"path={[str(t) for t in path]}")
+        # the DP's own order must evaluate to its claimed cost
+        assert abs(cost.evaluate(path, dp.order, spec.dims,
+                                 spec.sparse_indices) - dp.cost) < 1e-9
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(spec=spttn_specs())
+def test_dp_second_best_has_different_root(spec):
+    cost = MaxBufferSize()
+    for path in min_depth_paths(spec, max_paths=2):
+        dp = OrderDP(path, cost, spec.dims, spec.sparse_indices).solve()
+        if dp.alt_order is None:
+            continue
+        root_a = next(a[0] for a in dp.order if a)
+        root_b = next(a[0] for a in dp.alt_order if a)
+        assert root_a != root_b
+        assert dp.alt_cost >= dp.cost
+
+
+def test_paper_ttmc_example():
+    """Paper §3.3/Fig 1: TTMc admits a scalar-intermediate loop nest; the
+    max-buffer-dim optimum over the (T.V then .U) path is 0 (a scalar)."""
+    sp = S.ttmc3(8, 8, 8, 4, 4)
+    best = None
+    for path in min_depth_paths(sp):
+        dp = OrderDP(path, MaxBufferDim(), sp.dims, sp.sparse_indices).solve()
+        best = dp.cost if best is None else min(best, dp.cost)
+    assert best == 0  # Listing 5: X is a scalar
+
+
+def test_blas_metric_prefers_vector_intermediate():
+    """Paper Fig 10c: the BLAS metric picks the vector-intermediate order
+    (i,j,k,s) over the scalar one (i,j,s,k) for the T.V term."""
+    sp = S.ttmc3(8, 8, 8, 4, 4)
+    cost = ConstrainedBlas(2)
+    found = False
+    for path in min_depth_paths(sp):
+        if "(T.V)" not in path[0].out.name:
+            continue
+        dp = OrderDP(path, cost, sp.dims, sp.sparse_indices).solve()
+        # T.V term order must end with the dense index s (BLAS-able axpy)
+        assert dp.order[0][-1] == "s"
+        found = True
+    assert found

@@ -1,0 +1,65 @@
+"""Partially-fused loop nests (paper §8 future work, implemented at the
+enumeration/cost level)."""
+import numpy as np
+
+from repro.core import spec as S
+from repro.core.loopnest import build_forest
+from repro.core.partial_fusion import (best_partial_fusion,
+                                       build_forest_with_barriers,
+                                       enumerate_barrier_choices,
+                                       partial_fusion_metrics)
+from repro.core.paths import min_depth_paths
+
+
+def _ttmc_tv_path(spec):
+    return next(p for p in min_depth_paths(spec)
+                if "(T.V)" in p[0].out.name)
+
+
+def test_no_barriers_is_fully_fused():
+    spec = S.ttmc3(8, 8, 8, 4, 4)
+    path = _ttmc_tv_path(spec)
+    order = (("i", "j", "k", "s"), ("i", "j", "s", "r"))
+    f1 = build_forest(order)
+    f2 = build_forest_with_barriers(order, (False,))
+    # identical structure: fused under (i, j)
+    assert len(f1) == len(f2) == 1
+
+
+def test_full_barriers_reproduce_pairwise_listing2():
+    """All-barriers == the paper's Listing 2 (independent loop nests):
+    the intermediate X(i,j,s) is fully buffered (dim 3)."""
+    spec = S.ttmc3(8, 8, 8, 4, 4)
+    path = _ttmc_tv_path(spec)
+    order = (("i", "j", "k", "s"), ("i", "j", "s", "r"))
+    fused = partial_fusion_metrics(path, order, (False,), spec.dims,
+                                   spec.sparse_indices)
+    unfused = partial_fusion_metrics(path, order, (True,), spec.dims,
+                                     spec.sparse_indices)
+    assert fused["max_buffer_dim"] == 1       # X[s] vector (Listing 3)
+    assert unfused["max_buffer_dim"] == 3     # X[i,j,s]    (Listing 2)
+    assert unfused["n_roots"] == 2 and fused["n_roots"] == 1
+
+
+def test_partial_fusion_can_buy_blas_loops():
+    """TTTP: barriers around the dense (U.V) term free its loops from the
+    sparse prefix, increasing the total BLAS-able loop count at a buffer
+    cost — exactly the trade the paper's future-work section names."""
+    spec = S.tttp3(8, 8, 8, 4)
+    path = next(p for p in min_depth_paths(spec)
+                if "(U.V)" in p[1].out.name)
+    order = (("i", "j", "k", "r"), ("i", "j", "r"), ("i", "j", "k", "r"))
+    base = partial_fusion_metrics(path, order, (False, False), spec.dims,
+                                  spec.sparse_indices)
+    b, best = best_partial_fusion(path, order, spec.dims,
+                                  spec.sparse_indices)
+    assert best["blas_loops"] >= base["blas_loops"]
+    # and constrained search respects the bound
+    b2, m2 = best_partial_fusion(path, order, spec.dims,
+                                 spec.sparse_indices, buffer_dim_bound=3)
+    assert m2["max_buffer_dim"] <= 3
+
+
+def test_barrier_enumeration_size():
+    assert len(list(enumerate_barrier_choices(4))) == 8
+    assert list(enumerate_barrier_choices(1)) == [()]

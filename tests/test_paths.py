@@ -1,0 +1,56 @@
+"""Contraction-path enumeration (paper §4.1.1, Def 4.1)."""
+import pytest
+
+from repro.core import spec as S
+from repro.core import paths as P
+
+
+def test_count_formula():
+    # T(n) = C(n,2) T(n-1), T(2)=1  ->  1, 3, 18, 180
+    assert [P.count_paths(n) for n in (2, 3, 4, 5)] == [1, 3, 18, 180]
+
+
+@pytest.mark.parametrize("builder,n", [
+    (lambda: S.mttkrp(4, 5, 6, 3), 3),
+    (lambda: S.ttmc3(4, 5, 6, 3, 2), 3),
+    (lambda: S.tttp3(4, 5, 6, 3), 4),
+])
+def test_enumeration_matches_formula(builder, n):
+    sp = builder()
+    paths = list(P.enumerate_paths(sp))
+    assert len(paths) == P.count_paths(n)
+    # every path has N-1 terms for N inputs and ends at OUT
+    for p in paths:
+        assert len(p) == n - 1
+        assert p[-1].out.name == "OUT"
+        assert set(p[-1].out.indices) == set(sp.output.indices)
+
+
+def test_consumer_map_is_binary_tree():
+    sp = S.tttp3(4, 5, 6, 3)
+    for path in P.enumerate_paths(sp):
+        cons = P.consumer_map(path)
+        # every non-final term has exactly one consumer, later in the path
+        assert set(cons) == set(range(len(path) - 1))
+        assert all(v > k for k, v in cons.items())
+
+
+def test_min_depth_filter():
+    sp = S.ttmc3(4, 5, 6, 3, 2)
+    md = P.min_depth_paths(sp)
+    depths = [P.path_depth(p) for p in md]
+    assert all(d == depths[0] for d in depths)
+    # TTMc min depth = 4 (paper §2.4.2), unfused depth would be 5
+    assert depths[0] == 4
+    # Fig 1d path (U.V first) has depth 5 and is filtered out
+    all_depths = sorted({P.path_depth(p) for p in P.enumerate_paths(sp)})
+    assert all_depths == [4, 5]
+
+
+def test_intermediate_sparse_prefix_ordering():
+    sp = S.mttkrp(4, 5, 6, 3)
+    for path in P.enumerate_paths(sp):
+        for t in path:
+            sp_inds = [i for i in t.out.indices if i in ("i", "j", "k")]
+            # sparse indices stay in storage order in intermediates
+            assert sp_inds == sorted(sp_inds, key="ijk".index)

@@ -1,0 +1,134 @@
+"""Sparse-format invariants (hypothesis property tests) + serving + ring
+cache + roofline HLO parser units."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.sparse import build_csf, from_dense, random_sparse
+from repro.sparse.coo import from_coords, long_fiber_sparse
+from repro.sparse.csf import level_segments
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(
+    shape=st.tuples(st.integers(2, 8), st.integers(2, 8), st.integers(2, 8)),
+    density=st.floats(0.05, 0.6), seed=st.integers(0, 999))
+def test_csf_invariants(shape, density, seed):
+    T = random_sparse(shape, density, seed=seed)
+    hypothesis.assume(T.nnz > 0)
+    csf = build_csf(T)
+    # nnz^(I1..Ik) is nondecreasing in k and ends at nnz (paper §2.2)
+    levels = [csf.nnz_level(p) for p in range(csf.order + 1)]
+    assert levels[0] == 1 and levels[-1] == T.nnz
+    assert all(a <= b for a, b in zip(levels, levels[1:]))
+    # fiber coords at the leaf level reproduce the sorted COO coords
+    np.testing.assert_array_equal(csf.fiber_coords(csf.order), T.coords)
+    # parent chains are consistent: level_segments(k, k-1) == parent[k]
+    for p in range(2, csf.order + 1):
+        np.testing.assert_array_equal(level_segments(csf, p, p - 1),
+                                      csf.parent[p])
+    # segments are sorted (CSF order) — the §Perf sorted-reduce invariant
+    for child in range(1, csf.order + 1):
+        for par in range(child):
+            seg = level_segments(csf, child, par)
+            assert (np.diff(seg) >= 0).all()
+
+
+def test_roundtrip_dense():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((5, 4, 3)) * (rng.random((5, 4, 3)) < 0.3)
+    T = from_dense(a)
+    np.testing.assert_array_equal(T.to_dense(), a)
+
+
+def test_duplicate_coords_summed():
+    T = from_coords(np.array([[0, 0], [0, 0], [1, 1]]),
+                    np.array([1.0, 2.0, 5.0]), (2, 2))
+    assert T.nnz == 2
+    d = T.to_dense()
+    assert d[0, 0] == 3.0 and d[1, 1] == 5.0
+
+
+def test_long_fiber_generator_regime():
+    T = long_fiber_sparse((64, 64, 256), n_fibers=32, fiber_len=16, seed=0)
+    csf = build_csf(T)
+    # the generator must actually produce nnz >> nnz^(IJ)
+    assert csf.nnz_level(3) > 8 * csf.nnz_level(2) / 2
+
+
+def test_ring_cache_matches_full_cache():
+    """Sliding-window ring cache (O(window)) must reproduce full-cache
+    decode logits exactly (§Perf gemma3 long-context memory)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_reduced
+    from repro.models import decode_step, init_cache, model_init
+    cfg = get_reduced("gemma3-1b")
+    params, _ = model_init(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 3 * cfg.window
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab, (B, S)).astype(np.int32)
+    full = init_cache(cfg, B, S, ring=False)
+    ring = init_cache(cfg, B, S, ring=True)
+    assert sum(x.size for x in jax.tree.leaves(ring)) < \
+        sum(x.size for x in jax.tree.leaves(full))
+    step = jax.jit(lambda c, t, p: decode_step(params, cfg, c, t, p))
+    for t in range(S):
+        tk = jnp.asarray(toks[:, t:t + 1])
+        lf, full = step(full, tk, jnp.asarray(t, jnp.int32))
+        lr, ring = step(ring, tk, jnp.asarray(t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(lr),
+                                   atol=1e-3)
+
+
+def test_server_continuous_batching():
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import model_init
+    from repro.serve.serve_step import Request, Server
+    cfg = get_reduced("smollm-135m")
+    params, _ = model_init(jax.random.PRNGKey(0), cfg)
+    srv = Server(cfg, params, slots=2, cache_len=32)
+    rng = np.random.default_rng(0)
+    for _ in range(4):  # more requests than slots: refill path exercised
+        srv.submit(Request(prompt=rng.integers(0, cfg.vocab, 6)
+                           .astype(np.int32), max_new=5))
+    done = srv.run(max_steps=64)
+    assert len(done) == 4
+    assert all(len(r.out) >= 5 for r in done)
+
+
+def test_collective_parser():
+    from repro.launch.roofline import collective_bytes_from_hlo
+    hlo = """
+HloModule test
+%body.1 (arg: f32[8]) -> f32[8] {
+  %ag.1 = f32[64,128]{1,0} all-gather(f32[4,128]{1,0} %x), dimensions={0}
+  %ar.1 = bf16[256]{0} all-reduce(bf16[256]{0} %y), to_apply=%sum
+}
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %w = f32[8]{0} while(f32[8]{0} %init), body=%body.1, condition=%c
+  %rs = f32[32,32]{1,0} reduce-scatter(f32[32,32]{1,0} %z), dimensions={0}
+}
+"""
+    out = collective_bytes_from_hlo(hlo, [10])
+    per = out["per_op_bytes"]
+    assert per["all-gather"] == 10 * 64 * 128 * 4      # in while body x10
+    assert per["all-reduce"] == 10 * 256 * 2
+    assert per["reduce-scatter"] == 32 * 32 * 4        # entry: x1
+    # wire: all-reduce charged 2x
+    assert out["wire_bytes"] == (10 * 64 * 128 * 4 + 2 * 10 * 256 * 2
+                                 + 32 * 32 * 4)
+
+
+def test_roofline_memory_model():
+    from repro.configs import SHAPES, get_config
+    from repro.launch.roofline import active_params, analytic_memory, total_params
+    cfg = get_config("smollm-135m")
+    n = active_params(cfg)
+    assert 1.0e8 < n < 1.8e8            # ~135M
+    moe = get_config("granite-moe-1b-a400m")
+    assert total_params(moe) > 2.5 * active_params(moe)  # 32e vs top-8
+    am = analytic_memory(cfg, SHAPES["train_4k"], 256, False)
+    assert am["fits_16GiB"]
