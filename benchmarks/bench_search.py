@@ -1,8 +1,10 @@
 """Algorithm 1's complexity claim: DP vs exhaustive enumeration wall-clock
 (and agreement of optima) as kernel size grows — O(N^3 2^m m) vs
-O(prod |I_i|!)."""
+O(prod |I_i|!).  Plus the autotuner: cold measured search vs warm plan-cache
+load, and tuned-vs-model measured runtime."""
 from __future__ import annotations
 
+import tempfile
 import time
 
 from benchmarks.common import emit
@@ -11,6 +13,29 @@ from repro.core.cost import MaxBufferSize
 from repro.core.enumerate import brute_force_optimal
 from repro.core.order_dp import OrderDP
 from repro.core.paths import min_depth_paths
+
+
+def run_autotune(cache_dir: str | None = None):
+    """Cold search vs warm cache vs model-only planning, small MTTKRP."""
+    from repro.core.planner import plan
+
+    cache_dir = cache_dir or tempfile.mkdtemp(prefix="spttn-plans-")
+    rows = [("bench", "kernel", "phase", "ms", "candidate_execs",
+             "tuned_over_model_runtime")]
+    spec = S.mttkrp(64, 48, 32, 16)
+    for phase in ("cold", "warm"):
+        t0 = time.perf_counter()
+        p = plan(spec, autotune=True, cache_dir=cache_dir)
+        ms = (time.perf_counter() - t0) * 1e3
+        st = p.stats
+        ratio = ""
+        if st.best_seconds and st.model_seconds:
+            ratio = round(st.best_seconds / st.model_seconds, 3)
+        rows.append(("autotune", "mttkrp(64,48,32,16)", phase,
+                     round(ms, 1), st.executions, ratio))
+    assert rows[-1][4] == 0, "warm run must not execute candidates"
+    emit(rows)
+    return rows
 
 
 def run():
@@ -41,3 +66,4 @@ def run():
 
 if __name__ == "__main__":
     run()
+    run_autotune()

@@ -29,6 +29,7 @@ def main() -> None:
         ("index_order", lambda: bench_index_order.run(
             N=max(64, int(256 * scale)))),
         ("search", bench_search.run),
+        ("autotune", bench_search.run_autotune),
         ("moe_dispatch", bench_moe_dispatch.run),
     ]
     if os.environ.get("SCALING", "0") == "1":

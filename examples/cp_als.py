@@ -2,6 +2,9 @@
 by the SpTTN framework (the paper's flagship application).
 
     PYTHONPATH=src python examples/cp_als.py [--steps 200]
+    PYTHONPATH=src python examples/cp_als.py --autotune --cache-dir .plans
+        # measured search per mode-permuted MTTKRP; a re-run (or any later
+        # tensor with the same sparsity profile) loads the plans from disk
 """
 import argparse
 import time
@@ -17,7 +20,8 @@ from repro.sparse import build_csf, random_sparse
 from repro.sparse.coo import COOTensor
 
 
-def cp_als(coo: COOTensor, rank: int, steps: int, seed: int = 0):
+def cp_als(coo: COOTensor, rank: int, steps: int, seed: int = 0,
+           autotune: bool = False, cache_dir: str | None = None):
     I, J, K = coo.shape
     rng = np.random.default_rng(seed)
     A = jnp.asarray(rng.standard_normal((I, rank)).astype(np.float32)) * .1
@@ -32,7 +36,12 @@ def cp_als(coo: COOTensor, rank: int, steps: int, seed: int = 0):
         dims = dict(zip("ijk", csf_m.shape))
         spec = S.parse("ijk,ja,ka->ia", dims={**dims, "a": rank}, sparse=0,
                        names=["T", "F1", "F2"])
-        p = plan(spec, nnz_levels=csf_m.nnz_levels())
+        p = plan(spec, nnz_levels=csf_m.nnz_levels(), autotune=autotune,
+                 cache_dir=cache_dir, csf=csf_m)
+        if autotune and p.stats is not None:
+            how = "cache" if p.stats.cache_hit else (
+                f"search ({p.stats.candidates_timed} timed)")
+            print(f"mode {name}: plan from {how}", flush=True)
         ex = VectorizedExecutor(spec, p.path, p.order)
         arrays = CSFArrays.from_csf(csf_m)
         execs[name] = jax.jit(
@@ -42,7 +51,8 @@ def cp_als(coo: COOTensor, rank: int, steps: int, seed: int = 0):
     # TTTP-style residual on the observed entries
     spec_r = S.tttp3(I, J, K, rank)
     csf = build_csf(coo)
-    pr = plan(spec_r, nnz_levels=csf.nnz_levels())
+    pr = plan(spec_r, nnz_levels=csf.nnz_levels(), autotune=autotune,
+              cache_dir=cache_dir, csf=csf)
     exr = VectorizedExecutor(spec_r, pr.path, pr.order)
     arrays_r = CSFArrays.from_csf(csf)
     vals = jnp.asarray(coo.values)
@@ -84,6 +94,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--autotune", action="store_true",
+                    help="measured loop-nest search instead of model-only")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persist tuned plans here (skips re-search)")
     args = ap.parse_args()
     # synthesize a tensor with known rank-8 structure + noise
     rng = np.random.default_rng(1)
@@ -94,7 +108,8 @@ def main():
             * C0[T.coords[:, 2]]).sum(1).astype(np.float32)
     T.values[:] = vals + 0.01 * rng.standard_normal(len(vals))
     t0 = time.time()
-    _, hist = cp_als(T, rank=args.rank, steps=args.steps)
+    _, hist = cp_als(T, rank=args.rank, steps=args.steps,
+                     autotune=args.autotune, cache_dir=args.cache_dir)
     print(f"done in {time.time()-t0:.1f}s; fit {hist[0]:.3f} -> "
           f"{hist[-1]:.3f}")
     assert hist[-1] > hist[0]

@@ -1,8 +1,11 @@
 """Tucker decomposition via HOOI: the TTMc kernel (paper Eq. 2) planned and
 executed by the framework, one mode-permuted CSF per mode (as SPLATT does).
 
-    PYTHONPATH=src python examples/tucker_hooi.py
+    PYTHONPATH=src python examples/tucker_hooi.py [--autotune]
+        [--cache-dir .plans]
 """
+import argparse
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -13,7 +16,8 @@ from repro.core.planner import plan
 from repro.sparse import build_csf, random_sparse
 
 
-def main(steps: int = 8, ranks=(8, 6, 4)):
+def main(steps: int = 8, ranks=(8, 6, 4), autotune: bool = False,
+         cache_dir: str | None = None):
     I, J, K = 96, 80, 64
     T = random_sparse((I, J, K), 5e-3, seed=3)
     rng = np.random.default_rng(0)
@@ -30,7 +34,12 @@ def main(steps: int = 8, ranks=(8, 6, 4)):
         spec = S.parse("ijk,jr,ks->irs",
                        dims={**dims, "r": r1, "s": r2}, sparse=0,
                        names=["T", "U1", "U2"])
-        p = plan(spec, nnz_levels=csf_m.nnz_levels())
+        p = plan(spec, nnz_levels=csf_m.nnz_levels(), autotune=autotune,
+                 cache_dir=cache_dir, csf=csf_m)
+        if autotune and p.stats is not None:
+            how = "cache" if p.stats.cache_hit else (
+                f"search ({p.stats.candidates_timed} timed)")
+            print(f"mode {mode}: plan from {how}", flush=True)
         ex = VectorizedExecutor(spec, p.path, p.order)
         arrays = CSFArrays.from_csf(csf_m)
         execs.append(jax.jit(
@@ -50,4 +59,12 @@ def main(steps: int = 8, ranks=(8, 6, 4)):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--autotune", action="store_true",
+                    help="measured loop-nest search instead of model-only")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persist tuned plans here (skips re-search)")
+    args = ap.parse_args()
+    main(steps=args.steps, autotune=args.autotune,
+         cache_dir=args.cache_dir)

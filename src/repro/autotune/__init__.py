@@ -1,0 +1,24 @@
+"""Autotuning runtime with a persistent plan cache (DESIGN.md §4).
+
+Entry points:
+  * :func:`tune` — model-pruned enumeration + empirical timing; the engine
+    behind ``plan(spec, autotune=True, cache_dir=...)``.
+  * :class:`PlanCache` / :func:`cache_key` — disk persistence keyed by
+    (spec signature, CSF nnz-level profile, device kind).
+"""
+from repro.autotune.cache import (CACHE_VERSION, PlanCache, cache_key,
+                                  device_kind, spec_signature)
+from repro.autotune.candidates import (Candidate, default_nnz_levels,
+                                       generate_candidates)
+from repro.autotune.measure import (MeasureConfig, Measurement,
+                                    measure_candidates, synth_factors,
+                                    synth_inputs)
+from repro.autotune.tuner import SearchStats, TunerConfig, tune
+
+__all__ = [
+    "CACHE_VERSION", "PlanCache", "cache_key", "device_kind",
+    "spec_signature", "Candidate", "default_nnz_levels",
+    "generate_candidates", "MeasureConfig", "Measurement",
+    "measure_candidates", "synth_factors", "synth_inputs",
+    "SearchStats", "TunerConfig", "tune",
+]

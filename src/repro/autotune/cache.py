@@ -1,0 +1,104 @@
+"""Disk-backed plan cache (DESIGN.md §4).
+
+Plans depend only on the *fixed* sparsity pattern (paper §1), never on
+values, so a tuned schedule is reusable across process restarts and across
+tensors sharing a pattern.  The key is a content hash of
+
+  (spec signature, CSF nnz-level profile, device kind, CACHE_VERSION)
+
+- spec signature: canonical kernel string incl. names, dims, sparse marker;
+- nnz-level profile: {p: nnz^(I1..Ip)} — the exact quantity every cost
+  model consumes, so two patterns with equal profiles are planning-
+  equivalent by construction (values never enter);
+- device kind: platform + device model, since the empirically best nest is
+  hardware-specific;
+- CACHE_VERSION: bumped whenever plan semantics / serialization change —
+  the invalidation rule for stale entries (old files are simply unmatched,
+  never read).
+
+Entries are one JSON file per key, written atomically (tmp + rename) so a
+crashed search never leaves a torn plan.  A corrupt/unreadable entry is
+treated as a miss and overwritten by the next search.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Mapping
+
+from repro.core.spec import SpTTNSpec
+
+CACHE_VERSION = 1
+
+
+def spec_signature(spec: SpTTNSpec) -> str:
+    """Canonical kernel signature: operands (with sparse markers) + dims."""
+    ins = ",".join(
+        f"{t.name}{'*' if t.is_sparse else ''}({','.join(t.indices)})"
+        for t in spec.inputs)
+    out = f"{spec.output.name}({','.join(spec.output.indices)})"
+    dims = ",".join(f"{k}={spec.dims[k]}" for k in sorted(spec.dims))
+    return f"{ins}->{out}|{dims}"
+
+
+def device_kind() -> str:
+    import jax
+    d = jax.devices()[0]
+    return f"{d.platform}:{d.device_kind}"
+
+
+def cache_key(spec: SpTTNSpec,
+              nnz_levels: Mapping[int, int],
+              device: str | None = None) -> str:
+    doc = {
+        "version": CACHE_VERSION,
+        "spec": spec_signature(spec),
+        "nnz_levels": {str(k): int(v)
+                       for k, v in sorted(nnz_levels.items())},
+        "device": device if device is not None else device_kind(),
+    }
+    blob = json.dumps(doc, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+@dataclasses.dataclass
+class PlanCache:
+    """One JSON file per plan under ``cache_dir``."""
+
+    cache_dir: str
+
+    def __post_init__(self):
+        os.makedirs(self.cache_dir, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.cache_dir, f"plan-{key}.json")
+
+    def get(self, key: str):
+        """Returns the cached SpTTNPlan or None (miss / corrupt entry)."""
+        from repro.core.executor import plan_from_dict
+        try:
+            with open(self._path(key)) as f:
+                doc = json.load(f)
+            return plan_from_dict(doc["plan"])
+        except (OSError, ValueError, KeyError, TypeError, AttributeError):
+            # any malformed entry — invalid JSON, wrong shape, foreign
+            # writer — is a miss; the next search overwrites it
+            return None
+
+    def put(self, key: str, plan, meta: Mapping | None = None) -> str:
+        from repro.core.executor import plan_to_dict
+        doc = {"plan": plan_to_dict(plan), "meta": dict(meta or {})}
+        path = self._path(key)
+        fd, tmp = tempfile.mkstemp(dir=self.cache_dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, sort_keys=True, indent=1)
+            os.replace(tmp, path)   # atomic publish
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        return path

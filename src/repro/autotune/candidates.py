@@ -1,0 +1,108 @@
+"""Model-pruned candidate generation (paper §4.1 + SparseAuto's hybrid).
+
+The full loop-nest space is O((n!)^2/(n·2^n) · prod |I_i|!/k_i!) — far too
+large to time exhaustively, but the paper's cost models rank it well enough
+that the true optimum is almost always near the top.  We therefore keep,
+per min-depth contraction path, the Algorithm-1 (DP) optimal order plus a
+few enumerated alternatives, rank everything by (model cost, sparse-aware
+FLOPs), and hand only the head of that ranking to the measuring stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Mapping, Sequence
+
+from repro.core import cost as cost_lib
+from repro.core.cost import ConstrainedBlas, TreeCost, path_flops
+from repro.core.loopnest import LoopOrder, enumerate_orders
+from repro.core.order_dp import OrderDP
+from repro.core.paths import ContractionPath, min_depth_paths, path_depth
+from repro.core.spec import SpTTNSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One schedule the tuner may measure, with its model scores."""
+
+    path: ContractionPath
+    order: LoopOrder
+    cost: float          # model cost (TreeCost.evaluate — order-dependent)
+    flops: float         # sparse-aware FLOP model (path-dependent)
+
+    @property
+    def key(self) -> str:
+        terms = "|".join(str(t) for t in self.path)
+        orders = ";".join(",".join(a) for a in self.order)
+        return f"{terms}#{orders}"
+
+
+def default_nnz_levels(spec: SpTTNSpec) -> dict[int, int]:
+    """Density-agnostic default (same as the planner's): nnz^(I1..Ip) grows
+    with the prefix index space."""
+    prod = 1
+    levels = {0: 1}
+    for p, ind in enumerate(spec.sparse_indices, start=1):
+        prod *= spec.dims[ind]
+        levels[p] = prod
+    return levels
+
+
+def generate_candidates(spec: SpTTNSpec,
+                        cost: TreeCost | None = None,
+                        nnz_levels: Mapping[int, int] | None = None,
+                        max_paths: int | None = 16,
+                        depth_slack: int = 0,
+                        max_candidates: int = 8,
+                        orders_per_path: int = 3) -> list[Candidate]:
+    """Generate the model-pruned candidate set, best-ranked first.
+
+    Per path: the DP-optimal order always survives; ``orders_per_path - 1``
+    further orders come from exhaustive enumeration (cheap for the paper's
+    kernel sizes).  The final ranking is (cost, flops) ascending, truncated
+    to ``max_candidates``.
+    """
+    cost = cost or ConstrainedBlas(bound=2)
+    nnz_levels = dict(nnz_levels) if nnz_levels else default_nnz_levels(spec)
+    sp = spec.sparse_indices
+    seen: set[str] = set()
+    out: list[Candidate] = []
+
+    def add(path: ContractionPath, order: LoopOrder):
+        c = cost.evaluate(path, order, spec.dims, sp)
+        if c == cost_lib.INF:
+            return
+        f = path_flops(path, spec.dims, sp, nnz_levels)
+        cand = Candidate(path=path, order=order, cost=c, flops=f)
+        if cand.key in seen:
+            return
+        seen.add(cand.key)
+        out.append(cand)
+
+    for path in min_depth_paths(spec, max_paths=max_paths,
+                                slack=depth_slack):
+        res = OrderDP(path, cost, spec.dims, sp).solve()
+        if res.order is not None and res.cost != cost_lib.INF:
+            add(path, res.order)
+        extra = max(0, orders_per_path - 1)
+        if extra:
+            for order in itertools.islice(enumerate_orders(path, sp),
+                                          8 * extra):
+                if len([c for c in out if c.path is path]) > extra:
+                    break
+                add(path, order)
+
+    if not out:
+        # constraint infeasible everywhere: fall back to minimizing buffer
+        # size, which is always feasible (mirrors planner.plan's fallback)
+        from repro.core.cost import MaxBufferSize
+        if not isinstance(cost, MaxBufferSize):
+            return generate_candidates(
+                spec, cost=MaxBufferSize(), nnz_levels=nnz_levels,
+                max_paths=max_paths, depth_slack=depth_slack,
+                max_candidates=max_candidates,
+                orders_per_path=orders_per_path)
+        raise ValueError(f"no feasible loop nest found for {spec}")
+
+    out.sort(key=lambda c: (c.cost, c.flops, path_depth(c.path)))
+    return out[:max_candidates]

@@ -1,0 +1,108 @@
+"""Empirical candidate timing (paper §4.1: 'enumeration enables
+autotuning').
+
+Each candidate is compiled through :class:`VectorizedExecutor` + jax.jit,
+warmed up (absorbing compile time), then timed ``repeats`` times; the score
+is the median.  Early-exit pruning: once any candidate has finished, a
+later candidate whose *first* timed call already exceeds
+``prune_ratio x best_median`` is abandoned — the paper's kernels make the
+model ranking good enough that most losers die after one call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.autotune.candidates import Candidate
+from repro.core.spec import SpTTNSpec
+
+
+@dataclasses.dataclass
+class MeasureConfig:
+    warmup: int = 1
+    repeats: int = 3
+    prune_ratio: float = 2.0     # 0/inf disables early-exit pruning
+
+
+@dataclasses.dataclass
+class Measurement:
+    candidate: Candidate
+    seconds: float               # median over completed repeats
+    pruned: bool = False         # abandoned after the first timed call
+
+
+def synth_inputs(spec: SpTTNSpec, density: float = 0.05, seed: int = 0):
+    """Deterministic measurement inputs when the caller has no data yet:
+    a random sparse tensor over the spec's sparse dims + random factors.
+    Determinism matters — the synthesized nnz-level profile is part of the
+    plan-cache key, so a restart must resynthesize the same pattern."""
+    from repro.sparse import build_csf, random_sparse
+    shape = tuple(spec.dims[i] for i in spec.sparse_indices)
+    csf = build_csf(random_sparse(shape, density, seed=seed))
+    factors = synth_factors(spec, seed=seed)
+    return csf, factors
+
+
+def synth_factors(spec: SpTTNSpec, seed: int = 0):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    factors = {}
+    for t in spec.inputs:
+        if t.is_sparse:
+            continue
+        shape = tuple(spec.dims[i] for i in t.indices)
+        factors[t.name] = jnp.asarray(
+            rng.standard_normal(shape).astype(np.float32))
+    return factors
+
+
+def measure_candidates(spec: SpTTNSpec,
+                       candidates: Sequence[Candidate],
+                       arrays,
+                       factors: Mapping[str, object],
+                       config: MeasureConfig | None = None,
+                       stats=None) -> list[Measurement]:
+    """Time every candidate; returns measurements sorted fastest-first.
+
+    ``arrays`` is a device-resident :class:`CSFArrays`.  ``stats`` (a
+    :class:`~repro.autotune.tuner.SearchStats`) is incremented in place so
+    callers can assert how much empirical work a search performed.
+    """
+    import jax
+
+    from repro.core.executor import VectorizedExecutor
+
+    config = config or MeasureConfig()
+    results: list[Measurement] = []
+    best: float | None = None
+
+    def run(fn) -> float:
+        t0 = time.perf_counter()
+        out = fn(factors)
+        jax.block_until_ready(out)
+        if stats is not None:
+            stats.executions += 1
+        return time.perf_counter() - t0
+
+    for cand in candidates:
+        ex = VectorizedExecutor(spec, cand.path, cand.order)
+        fn = jax.jit(lambda f, ex=ex: ex(arrays, f))
+        for _ in range(config.warmup):
+            run(fn)
+        if stats is not None:
+            stats.candidates_timed += 1
+        first = run(fn)
+        if (best is not None and config.prune_ratio
+                and first > config.prune_ratio * best):
+            results.append(Measurement(cand, first, pruned=True))
+            continue
+        times = [first] + [run(fn) for _ in range(config.repeats - 1)]
+        med = float(np.median(times))
+        results.append(Measurement(cand, med))
+        best = med if best is None else min(best, med)
+
+    results.sort(key=lambda m: m.seconds)
+    return results

@@ -16,6 +16,7 @@
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 import string
 from typing import Mapping, Sequence
@@ -29,6 +30,79 @@ from repro.core.loopnest import LoopOrder, buffer_indices
 from repro.core.paths import ContractionPath, Term, consumer_map
 from repro.core.spec import SpTTNSpec
 from repro.sparse.csf import CSFTensor, level_segments
+
+
+# =========================================================================== #
+# Plan serialization (DESIGN.md §4) — plans are pattern-static, so a chosen
+# schedule survives process restarts via the autotuner's disk cache.
+# =========================================================================== #
+PLAN_JSON_VERSION = 1
+
+
+def _operand_to_dict(op) -> dict:
+    return {"name": op.name, "indices": list(op.indices),
+            "sparse": bool(op.is_sparse)}
+
+
+def _operand_from_dict(d):
+    from repro.core.paths import Operand
+    return Operand(name=d["name"], indices=tuple(d["indices"]),
+                   is_sparse=bool(d["sparse"]))
+
+
+def plan_to_dict(plan) -> dict:
+    """Serialize an :class:`~repro.core.planner.SpTTNPlan` to plain JSON
+    types.  Everything a plan holds is structural (names, index tuples,
+    dims) plus float diagnostics, so the round trip is exact."""
+    spec = plan.spec
+    return {
+        "version": PLAN_JSON_VERSION,
+        "spec": {
+            "inputs": [_operand_to_dict(t) for t in spec.inputs],
+            "output": _operand_to_dict(spec.output),
+            "dims": {k: int(v) for k, v in spec.dims.items()},
+        },
+        "path": [{"lhs": _operand_to_dict(t.lhs),
+                  "rhs": _operand_to_dict(t.rhs),
+                  "out": _operand_to_dict(t.out)} for t in plan.path],
+        "order": [list(a) for a in plan.order],
+        "cost": plan.cost,
+        "flops": plan.flops,
+        "depth": plan.depth,
+    }
+
+
+def plan_from_dict(doc: dict):
+    from repro.core.paths import Term
+    from repro.core.planner import SpTTNPlan
+    if doc.get("version") != PLAN_JSON_VERSION:
+        raise ValueError(f"unsupported plan version {doc.get('version')!r}")
+    sd = doc["spec"]
+    spec = SpTTNSpec(
+        inputs=tuple(_tensor_ref(t) for t in sd["inputs"]),
+        output=_tensor_ref(sd["output"]),
+        dims=dict(sd["dims"]))
+    path = tuple(Term(lhs=_operand_from_dict(t["lhs"]),
+                      rhs=_operand_from_dict(t["rhs"]),
+                      out=_operand_from_dict(t["out"]))
+                 for t in doc["path"])
+    order = tuple(tuple(a) for a in doc["order"])
+    return SpTTNPlan(spec=spec, path=path, order=order, cost=doc["cost"],
+                     flops=doc["flops"], depth=doc["depth"])
+
+
+def _tensor_ref(d):
+    from repro.core.spec import TensorRef
+    return TensorRef(name=d["name"], indices=tuple(d["indices"]),
+                     is_sparse=bool(d["sparse"]))
+
+
+def plan_to_json(plan) -> str:
+    return json.dumps(plan_to_dict(plan), sort_keys=True)
+
+
+def plan_from_json(s: str):
+    return plan_from_dict(json.loads(s))
 
 
 # =========================================================================== #

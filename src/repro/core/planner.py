@@ -24,7 +24,11 @@ from repro.core.spec import SpTTNSpec
 
 @dataclasses.dataclass
 class SpTTNPlan:
-    """A chosen schedule: contraction path + loop order (+ diagnostics)."""
+    """A chosen schedule: contraction path + loop order (+ diagnostics).
+
+    ``stats`` is attached by autotuned planning (search/cache accounting);
+    it is excluded from equality so a cache round trip compares identical.
+    """
 
     spec: SpTTNSpec
     path: ContractionPath
@@ -32,6 +36,8 @@ class SpTTNPlan:
     cost: float
     flops: float
     depth: int
+    stats: object | None = dataclasses.field(default=None, compare=False,
+                                             repr=False)
 
     def describe(self) -> str:  # pragma: no cover - debugging aid
         lines = [f"SpTTNPlan depth={self.depth} cost={self.cost} "
@@ -45,12 +51,38 @@ def plan(spec: SpTTNSpec,
          cost: TreeCost | None = None,
          nnz_levels: Mapping[int, int] | None = None,
          max_paths: int | None = 64,
-         depth_slack: int = 0) -> SpTTNPlan:
+         depth_slack: int = 0,
+         autotune: bool = False,
+         cache_dir: str | None = None,
+         csf=None,
+         factors: Mapping | None = None,
+         tuner=None) -> SpTTNPlan:
     """Find the minimum-cost loop nest for an SpTTN kernel.
 
     Default cost is the paper's experiment metric (§7): maximize BLAS-able
     innermost dense loops with intermediate buffer dimension bounded by 2.
+
+    ``autotune=True`` augments the model with empirical measurement
+    (paper §4.1): candidates are model-pruned, compiled, and timed, and the
+    winner is persisted under ``cache_dir`` keyed by (spec signature, CSF
+    nnz-level profile, device kind) — a later call in any process with the
+    same key returns the cached plan without executing a single candidate
+    (see ``plan.stats``).  ``csf``/``factors`` supply measurement inputs
+    and default to deterministic synthetic ones; ``tuner`` is an optional
+    :class:`repro.autotune.TunerConfig`.
     """
+    if autotune:
+        from repro.autotune import TunerConfig, tune
+        if tuner is None:
+            # honor this function's search-width arguments; an explicit
+            # TunerConfig overrides them wholesale
+            tuner = TunerConfig(max_paths=max_paths,
+                                depth_slack=depth_slack)
+        best, stats = tune(spec, cost=cost, nnz_levels=nnz_levels, csf=csf,
+                           factors=factors, cache_dir=cache_dir,
+                           config=tuner)
+        best.stats = stats
+        return best
     cost = cost or ConstrainedBlas(bound=2)
     if nnz_levels is None:
         # density-agnostic default: nnz^(I1..Ip) grows with the prefix space
@@ -114,27 +146,21 @@ def cached_plan(expr: str, dims: Mapping[str, int], sparse: int | None = 0,
 def autotune(spec: SpTTNSpec, csf, factors,
              candidates: Sequence[tuple[ContractionPath, LoopOrder]],
              repeats: int = 3):
-    """Measurement-driven selection among enumerated loop nests (§4's
-    'enumeration enables autotuning').  Executes each candidate with the
-    vectorized engine and returns (best_candidate, timings)."""
-    import time
+    """Measurement-driven selection among explicit (path, order) pairs
+    (§4's 'enumeration enables autotuning').  Thin wrapper over
+    :mod:`repro.autotune` for callers that bring their own candidate list;
+    returns (best_candidate, [(seconds, path, order), ...] ascending).
+    """
+    from repro.autotune.candidates import Candidate
+    from repro.autotune.measure import MeasureConfig, measure_candidates
+    from repro.core.executor import CSFArrays
 
-    import jax
-
-    from repro.core.executor import CSFArrays, VectorizedExecutor
-
-    arrays = CSFArrays.from_csf(csf) if not hasattr(csf, "values_") else csf
-    results = []
-    for path, order in candidates:
-        ex = VectorizedExecutor(spec, path, order)
-        fn = jax.jit(lambda f, e=ex: e(arrays, f))
-        out = fn(factors)
-        jax.block_until_ready(out)
-        t0 = time.perf_counter()
-        for _ in range(repeats):
-            out = fn(factors)
-        jax.block_until_ready(out)
-        results.append(((time.perf_counter() - t0) / repeats, path, order))
-    results.sort(key=lambda r: r[0])
-    t, path, order = results[0]
+    arrays = csf if isinstance(csf, CSFArrays) else CSFArrays.from_csf(csf)
+    cands = [Candidate(path=p, order=o, cost=0.0, flops=0.0)
+             for p, o in candidates]
+    ms = measure_candidates(
+        spec, cands, arrays, factors,
+        config=MeasureConfig(warmup=1, repeats=repeats, prune_ratio=0.0))
+    results = [(m.seconds, m.candidate.path, m.candidate.order) for m in ms]
+    _, path, order = results[0]
     return (path, order), results

@@ -211,7 +211,8 @@ def make_distributed(spec: SpTTNSpec, plan: SpTTNPlan, coo: COOTensor,
             out = jax.lax.psum(out, a)
         return out
 
-    fn = jax.jit(jax.shard_map(
+    from repro.distributed.collectives import shard_map
+    fn = jax.jit(shard_map(
         local_fn, mesh=mesh,
         in_specs=(csf_specs, factor_specs),
         out_specs=out_spec,

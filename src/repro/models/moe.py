@@ -95,14 +95,23 @@ def _expert_ffn(p, xe):
     return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
 
 
-def moe_apply(p, cfg: ModelConfig, x, deterministic_dispatch: str | None = None):
+def moe_apply(p, cfg: ModelConfig, x, deterministic_dispatch: str | None = None,
+              train: bool = True):
     """x (B, T, D) -> (y, aux_loss).  Dispatch mode from the SpTTN planner
-    unless overridden by cfg.moe.dispatch / deterministic_dispatch."""
+    unless overridden by cfg.moe.dispatch / deterministic_dispatch.
+
+    ``train=False`` (inference) uses *dropless* capacity: slots are assigned
+    in token order, so capacity overflow in a batched forward drops exactly
+    the trailing tokens — the ones a later decode step recomputes without
+    batch contention.  Dropless inference keeps prefill/decode consistent
+    with a batched forward (DESIGN.md §5).  Per-expert load is at most N
+    (top-k expert ids are distinct per token), so C = N suffices.
+    """
     m: MoEConfig = cfg.moe
     B, T, D = x.shape
     N = B * T
     x2d = x.reshape(N, D)
-    C = _capacity(m, N)
+    C = _capacity(m, N) if train else max(8, -(-N // 8) * 8)
     mode = deterministic_dispatch or m.dispatch
     if mode == "auto":
         mode = choose_dispatch(N, m.n_experts, m.top_k, C, D)

@@ -64,7 +64,7 @@ def block_init(kind: str, key, cfg: ModelConfig, dtype, ffn: str = "dense"):
 
 def block_apply(kind: str, p, cfg: ModelConfig, x, positions,
                 state=None, update_slice=None, enc_out=None,
-                ffn: str = "dense"):
+                ffn: str = "dense", train: bool = True):
     """Returns (x, new_state, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = L.apply_norm(cfg.norm, p["n1"], x)
@@ -105,7 +105,7 @@ def block_apply(kind: str, p, cfg: ModelConfig, x, positions,
                               enc_out)
     h = L.apply_norm(cfg.norm, p["n2"], x)
     if ffn == "moe":
-        y, aux = M.moe_apply(p["ffn"], cfg, h)
+        y, aux = M.moe_apply(p["ffn"], cfg, h, train=train)
     else:
         y = L.mlp_apply(cfg.mlp, p["ffn"], h)
     if cfg.post_norms:
@@ -180,7 +180,7 @@ def _stack_init(key, cfg, plan: LayerPlan, dtype):
 
 def _stack_apply(p, cfg, plan: LayerPlan, x, positions, caches=None,
                  update_slice=None, enc_out=None, remat: bool = True,
-                 unroll: bool = False):
+                 unroll: bool = False, train: bool = True):
     """Apply head (unrolled) + scanned groups + tail.  ``caches`` mirrors the
     param structure; returns (x, new_caches, aux_sum).  ``unroll=True``
     replaces lax.scan with a python loop (used by the dry-run cost probes,
@@ -190,7 +190,7 @@ def _stack_apply(p, cfg, plan: LayerPlan, x, positions, caches=None,
     for i, (kind, ffn) in enumerate(plan.head):
         st = None if caches is None else caches["head"][i]
         x, ns, aux = block_apply(kind, p["head"][i], cfg, x, positions, st,
-                                 update_slice, enc_out, ffn)
+                                 update_slice, enc_out, ffn, train)
         new_caches["head"].append(ns)
         aux_total += aux
 
@@ -205,7 +205,7 @@ def _stack_apply(p, cfg, plan: LayerPlan, x, positions, caches=None,
                 st = None if cache_g is None else cache_g[f"b{j}"]
                 x, ns, aux = block_apply(kind, params_g[f"b{j}"], cfg, x,
                                          positions, st, update_slice,
-                                         enc_out, ffn)
+                                         enc_out, ffn, train)
                 new_cache_g[f"b{j}"] = ns if ns is not None else 0
                 aux_total = aux_total + aux
             new_scan_list.append(new_cache_g)
@@ -223,7 +223,7 @@ def _stack_apply(p, cfg, plan: LayerPlan, x, positions, caches=None,
                 st = None if cache_g is None else cache_g[f"b{j}"]
                 x, ns, aux = block_apply(kind, params_g[f"b{j}"], cfg, x,
                                          positions, st, update_slice,
-                                         enc_out, ffn)
+                                         enc_out, ffn, train)
                 new_cache_g[f"b{j}"] = ns if ns is not None else 0
                 auxc = auxc + aux
             return (x, auxc), new_cache_g
@@ -243,7 +243,7 @@ def _stack_apply(p, cfg, plan: LayerPlan, x, positions, caches=None,
     for i, (kind, ffn) in enumerate(plan.tail):
         st = None if caches is None else caches["tail"][i]
         x, ns, aux = block_apply(kind, p["tail"][i], cfg, x, positions, st,
-                                 update_slice, enc_out, ffn)
+                                 update_slice, enc_out, ffn, train)
         new_caches["tail"].append(ns)
         aux_total += aux
     return x, new_caches, aux_total
@@ -305,8 +305,12 @@ def _embed_inputs(p, cfg: ModelConfig, batch):
 
 
 def forward(p, cfg: ModelConfig, batch, remat: bool = True,
-            unroll: bool = False):
-    """Training/prefill forward: returns (logits, aux_loss)."""
+            unroll: bool = False, train: bool = False):
+    """Full-sequence forward: returns (logits, aux_loss).
+
+    ``train=True`` (set by :func:`loss_fn`) enables capacity-bounded MoE
+    dispatch; the default is inference semantics (dropless MoE), which keeps
+    a batched forward consistent with prefill + decode_step."""
     x = _embed_inputs(p, cfg, batch)
     x = shard_activation(x, "btd")
     B, T = batch["tokens"].shape
@@ -317,7 +321,8 @@ def forward(p, cfg: ModelConfig, batch, remat: bool = True,
                           remat=remat, unroll=unroll)
     plan = layer_plan(cfg, decoder=True)
     x, _, aux = _stack_apply(p["dec"], cfg, plan, x, positions,
-                             enc_out=enc_out, remat=remat, unroll=unroll)
+                             enc_out=enc_out, remat=remat, unroll=unroll,
+                             train=train)
     x = L.apply_norm(cfg.norm, p["final_norm"], x)
     logits = _logits(p, cfg, x)
     return logits, aux
@@ -342,7 +347,8 @@ def _logits(p, cfg: ModelConfig, x):
 
 def loss_fn(p, cfg: ModelConfig, batch, remat: bool = True,
             unroll: bool = False):
-    logits, aux = forward(p, cfg, batch, remat=remat, unroll=unroll)
+    logits, aux = forward(p, cfg, batch, remat=remat, unroll=unroll,
+                          train=True)
     targets = batch["labels"]
     logits = logits[:, :-1].astype(jnp.float32)
     targets = targets[:, 1:]
@@ -421,7 +427,7 @@ def decode_step(p, cfg: ModelConfig, caches, tokens, pos, enc_out=None,
     x, new_caches, _ = _stack_apply(p["dec"], cfg, plan, x, positions,
                                     caches=caches, update_slice=pos,
                                     enc_out=enc_out, remat=False,
-                                    unroll=unroll)
+                                    unroll=unroll, train=False)
     x = L.apply_norm(cfg.norm, p["final_norm"], x)
     return _logits(p, cfg, x), new_caches
 
@@ -443,6 +449,6 @@ def prefill(p, cfg: ModelConfig, batch, cache_len: int | None = None,
                                     caches=caches,
                                     update_slice=jnp.asarray(0, jnp.int32),
                                     enc_out=enc_out, remat=remat,
-                                    unroll=unroll)
+                                    unroll=unroll, train=False)
     x = L.apply_norm(cfg.norm, p["final_norm"], x)
     return _logits(p, cfg, x[:, -1:]), new_caches

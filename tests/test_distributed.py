@@ -46,7 +46,7 @@ def test_compressed_psum_unbiased():
     code = """
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from repro.distributed.collectives import compressed_psum
+from repro.distributed.collectives import compressed_psum, shard_map
 
 mesh = jax.make_mesh((8,), ("d",))
 x = jax.random.normal(jax.random.PRNGKey(0), (8, 256)) * 3.0
@@ -54,7 +54,7 @@ x = jax.random.normal(jax.random.PRNGKey(0), (8, 256)) * 3.0
 def f(xs, key):
     return compressed_psum(xs, "d", key)
 
-g = jax.jit(jax.shard_map(f, mesh=mesh,
+g = jax.jit(shard_map(f, mesh=mesh,
     in_specs=(P("d"), P()), out_specs=P("d"), check_vma=False))
 exact = np.asarray(x).sum(0)
 outs = []
@@ -75,7 +75,7 @@ def test_reduce_scatter_grads():
     code = """
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from repro.distributed.collectives import reduce_scatter_grads
+from repro.distributed.collectives import reduce_scatter_grads, shard_map
 
 mesh = jax.make_mesh((8,), ("d",))
 g = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 16, 4)),
@@ -85,9 +85,9 @@ def f(grads):
     local = jax.tree.map(lambda x: x[0], grads)
     return reduce_scatter_grads(local, "d")
 
-fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P("d"),),
-                           out_specs={"w": P("d"), "b": P()},
-                           check_vma=False))
+fn = jax.jit(shard_map(f, mesh=mesh, in_specs=(P("d"),),
+                       out_specs={"w": P("d"), "b": P()},
+                       check_vma=False))
 out = fn(g)
 np.testing.assert_allclose(np.asarray(out["w"]),
                            np.asarray(g["w"]).sum(0), atol=1e-5)
@@ -99,6 +99,7 @@ print("RS-OK")
     assert "RS-OK" in out
 
 
+@pytest.mark.slow
 def test_sharded_train_step_runs():
     """Real sharded train step on a (4,2) mesh with a reduced model:
     loss finite + params sharded as specified."""

@@ -3,7 +3,9 @@ vectorized JAX engine must both match the dense einsum oracle, for every
 enumerated fully-fused loop nest (property-based)."""
 import itertools
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import numpy as np
 

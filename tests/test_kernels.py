@@ -117,7 +117,6 @@ def test_local_attn_sweep(T, H, D, window, bq, rng):
 
 
 def test_padded_segment_layout_invariants(rng):
-    import hypothesis
     # static checks incl. empty segments
     seg = np.array([0, 0, 2, 2, 2, 5])
     lay = padded_segment_layout(seg, nseg=6, block=4)

@@ -14,6 +14,7 @@ from repro.models.transformer import _encode
 from repro.train.train_step import init_train_state, make_train_step
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_forward_and_train_step(arch):
     cfg = get_reduced(arch)
@@ -37,6 +38,7 @@ def test_forward_and_train_step(arch):
     assert delta > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_prefill_decode_matches_forward(arch):
     cfg = get_reduced(arch)
@@ -65,6 +67,7 @@ def test_prefill_decode_matches_forward(arch):
                                np.asarray(logits_full[:, S - 1]), atol=tol)
 
 
+@pytest.mark.slow
 def test_microbatch_equivalence():
     """k microbatches must match the single-batch gradient step."""
     cfg = get_reduced("smollm-135m")

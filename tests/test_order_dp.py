@@ -1,8 +1,9 @@
 """Algorithm 1 (Theorem 4.9): the DP optimum must equal the exhaustive
 optimum over all valid loop orders, for every tree-separable cost."""
-import hypothesis
-import hypothesis.strategies as st
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 
 from repro.core import spec as S
 from repro.core.cost import (CacheMisses, ConstrainedBlas, MaxBufferDim,

@@ -1,9 +1,10 @@
 """Sparse-format invariants (hypothesis property tests) + serving + ring
 cache + roofline HLO parser units."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import numpy as np
-import pytest
 
 from repro.sparse import build_csf, from_dense, random_sparse
 from repro.sparse.coo import from_coords, long_fiber_sparse
