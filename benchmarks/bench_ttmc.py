@@ -1,7 +1,8 @@
 """Paper §7 TTMc: planned factorize-and-fuse vs unfactorized — the paper's
 "orders of magnitude vs TACO/SparseLNR" claim reduces to exactly this
 schedule difference (unfactorized iterates nnz*R*S; fused iterates
-nnz*S + nnz^(IJ)*R*S)."""
+nnz*S + nnz^(IJ)*R*S) — plus the xla-vs-pallas backend row on the
+planned schedule (generated kernels; interpret mode off-TPU)."""
 from __future__ import annotations
 
 import numpy as np
@@ -11,7 +12,7 @@ import jax
 from benchmarks.common import emit, tensor_suite, timeit
 from repro.core import spec as S
 from repro.core.executor import (CSFArrays, VectorizedExecutor,
-                                 execute_unfactorized)
+                                 execute_unfactorized, make_executor)
 from repro.core.planner import plan
 
 
@@ -35,12 +36,19 @@ def run(scale: float = 1.0, R: int = 16, Sdim: int = 16):
         ex = VectorizedExecutor(spec, pl_.path, pl_.order)
         fused = jax.jit(lambda f: ex(arrays, f))
         t_fus = timeit(fused, factors)
+        pex = make_executor(spec, pl_.path, pl_.order, backend="pallas")
+        pallas_fn = jax.jit(lambda f: pex(arrays, f))
+        t_pal = timeit(pallas_fn, factors)
         rows.append(("ttmc", name, "unfactorized", round(t_unf * 1e6, 1),
                      1.0))
-        rows.append(("ttmc", name, "spttn-planned", round(t_fus * 1e6, 1),
-                     round(t_unf / t_fus, 2)))
+        rows.append(("ttmc", name, "spttn-planned-xla",
+                     round(t_fus * 1e6, 1), round(t_unf / t_fus, 2)))
+        rows.append(("ttmc", name, "spttn-planned-pallas",
+                     round(t_pal * 1e6, 1), round(t_unf / t_pal, 2)))
         a, b = np.asarray(unfact(factors)), np.asarray(fused(factors))
+        c = np.asarray(pallas_fn(factors))
         assert np.allclose(a, b, atol=1e-2 * max(1.0, np.abs(a).max()))
+        assert np.allclose(a, c, atol=1e-2 * max(1.0, np.abs(a).max()))
     emit(rows)
     return rows
 

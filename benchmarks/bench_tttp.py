@@ -1,5 +1,6 @@
 """Paper Fig 9(c)/§7 TTTP (generalized SDDMM): planned vs unfactorized vs
-the Pallas leaf kernel (interpret mode on CPU; TPU target)."""
+the generated Pallas backend on the planned schedule, plus the leaf-kernel
+XLA formulation (interpret mode on CPU; TPU target)."""
 from __future__ import annotations
 
 import numpy as np
@@ -9,9 +10,8 @@ import jax
 from benchmarks.common import emit, tensor_suite, timeit
 from repro.core import spec as S
 from repro.core.executor import (CSFArrays, VectorizedExecutor,
-                                 execute_unfactorized)
+                                 execute_unfactorized, make_executor)
 from repro.core.planner import plan
-from repro.kernels import ops
 
 
 def run(scale: float = 1.0, R: int = 32):
@@ -43,10 +43,15 @@ def run(scale: float = 1.0, R: int = 32):
         leaf = jax.jit(lambda f: kref.tttp_ref(
             vals, f["U"][iidx], f["V"][jidx], f["W"][kidx]))
         t_leaf = timeit(leaf, factors)
+        pex = make_executor(spec, pl_.path, pl_.order, backend="pallas")
+        pallas_fn = jax.jit(lambda f: pex(arrays, f))
+        t_pal = timeit(pallas_fn, factors)
         rows.append(("tttp", name, "unfactorized", round(t_unf * 1e6, 1),
                      1.0))
-        rows.append(("tttp", name, "spttn-planned", round(t_fus * 1e6, 1),
-                     round(t_unf / t_fus, 2)))
+        rows.append(("tttp", name, "spttn-planned-xla",
+                     round(t_fus * 1e6, 1), round(t_unf / t_fus, 2)))
+        rows.append(("tttp", name, "spttn-planned-pallas",
+                     round(t_pal * 1e6, 1), round(t_unf / t_pal, 2)))
         rows.append(("tttp", name, "leaf-kernel-xla",
                      round(t_leaf * 1e6, 1), round(t_unf / t_leaf, 2)))
     emit(rows)

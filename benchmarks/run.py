@@ -8,14 +8,45 @@
 
 Prints ``name,...,us_per_call,derived`` CSV rows.  SCALE env var shrinks or
 grows tensor sizes (default 0.5 keeps the suite under ~2 min on CPU).
+
+CI contract (the bench-smoke lane):
+  * any suite raising makes the process exit nonzero — a broken benchmark
+    fails the build instead of rotting silently;
+  * BENCH_JSON=path writes per-row medians as JSON
+    ``{suite: {"tensor|schedule": us_per_call}}`` for the regression gate
+    (scripts/check_bench_regression.py against the committed baseline).
 """
 from __future__ import annotations
 
+import json
 import os
 import traceback
 
 
-def main() -> None:
+def medians(results: dict) -> dict:
+    """Extract ``{suite: {row_key: us_per_call}}`` from the row lists the
+    suites return.  Only rows under a ``us_per_call`` header participate —
+    search-phase timings (``ms`` columns) are too machine-noisy to gate."""
+    out: dict[str, dict[str, float]] = {}
+    for suite, rows in results.items():
+        if not isinstance(rows, list) or not rows:
+            continue
+        header = rows[0]
+        if "us_per_call" not in header:
+            continue
+        idx = list(header).index("us_per_call")
+        entries = {}
+        for row in rows[1:]:
+            try:
+                entries["|".join(str(x) for x in row[:idx])] = float(row[idx])
+            except (TypeError, ValueError):
+                continue
+        if entries:
+            out[suite] = entries
+    return out
+
+
+def main() -> int:
     scale = float(os.environ.get("SCALE", "0.5"))
     from benchmarks import (bench_index_order, bench_moe_dispatch,
                             bench_mttkrp, bench_search, bench_strong_scaling,
@@ -35,14 +66,28 @@ def main() -> None:
     if os.environ.get("SCALING", "0") == "1":
         suites.append(("strong_scaling", bench_strong_scaling.run))
 
+    results: dict[str, object] = {}
+    failed: list[str] = []
     for name, fn in suites:
         print(f"# === {name} ===", flush=True)
         try:
-            fn()
+            results[name] = fn()
         except Exception:
             traceback.print_exc()
             print(f"{name},ERROR", flush=True)
+            failed.append(name)
+
+    json_path = os.environ.get("BENCH_JSON")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(medians(results), f, indent=1, sort_keys=True)
+        print(f"# medians -> {json_path}", flush=True)
+
+    if failed:
+        print(f"# FAILED suites: {','.join(failed)}", flush=True)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Benchmark regression gate for the CI bench-smoke lane.
+
+Compares a freshly measured medians file (benchmarks/run.py with
+BENCH_JSON=...) against the committed baseline (BENCH_pr2.json) and
+fails when any shared row slowed down by more than ``--threshold``
+(default 3x — generous on purpose: CI runners are shared machines, and
+the gate's job is to catch order-of-magnitude schedule regressions, not
+scheduling jitter).
+
+Seeding rule: a missing or empty baseline passes — the first run of the
+lane establishes the perf trajectory instead of blocking it.  Rows that
+appear on only one side are reported but never fatal (benchmarks come
+and go; renames shouldn't break the build).
+
+Usage:
+  python scripts/check_bench_regression.py BASELINE.json NEW.json \
+      [--threshold 3.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict):
+        raise ValueError(f"{path}: expected a JSON object of suites")
+    return doc
+
+
+def compare(base: dict, new: dict, threshold: float) -> int:
+    regressions, improved, checked = [], 0, 0
+    for suite, rows in sorted(new.items()):
+        base_rows = base.get(suite, {})
+        for key, us in sorted(rows.items()):
+            old = base_rows.get(key)
+            if old is None:
+                print(f"  new row (unchecked): {suite}/{key} = {us:.1f}us")
+                continue
+            checked += 1
+            ratio = us / old if old > 0 else float("inf")
+            if ratio > threshold:
+                regressions.append((suite, key, old, us, ratio))
+            elif ratio < 1.0:
+                improved += 1
+    gone = [(s, k) for s, rows in sorted(base.items())
+            for k in sorted(rows) if k not in new.get(s, {})]
+    for s, k in gone:
+        print(f"  baseline row disappeared (unchecked): {s}/{k}")
+
+    print(f"checked {checked} rows against baseline "
+          f"({improved} faster, {len(regressions)} over {threshold:g}x)")
+    for suite, key, old, us, ratio in regressions:
+        print(f"REGRESSION {suite}/{key}: {old:.1f}us -> {us:.1f}us "
+              f"({ratio:.2f}x > {threshold:g}x)")
+    return 1 if regressions else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=3.0)
+    args = ap.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; seeding run — pass")
+        return 0
+    base = load(args.baseline)
+    if not base:
+        print("empty baseline; seeding run — pass")
+        return 0
+    new = load(args.new)
+    return compare(base, new, args.threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,12 +13,13 @@ from repro.autotune.candidates import (Candidate, default_nnz_levels,
 from repro.autotune.measure import (MeasureConfig, Measurement,
                                     measure_candidates, synth_factors,
                                     synth_inputs)
-from repro.autotune.tuner import SearchStats, TunerConfig, tune
+from repro.autotune.tuner import (SearchStats, TunerConfig,
+                                  default_backends, tune)
 
 __all__ = [
     "CACHE_VERSION", "PlanCache", "cache_key", "device_kind",
     "spec_signature", "Candidate", "default_nnz_levels",
     "generate_candidates", "MeasureConfig", "Measurement",
     "measure_candidates", "synth_factors", "synth_inputs",
-    "SearchStats", "TunerConfig", "tune",
+    "SearchStats", "TunerConfig", "default_backends", "tune",
 ]

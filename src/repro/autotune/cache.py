@@ -31,7 +31,9 @@ from typing import Mapping
 
 from repro.core.spec import SpTTNSpec
 
-CACHE_VERSION = 1
+# v2: plans carry a tuned ``backend`` (PLAN_JSON_VERSION 2); v1 entries
+# deserialize to a different schema and must be unmatched, never read.
+CACHE_VERSION = 2
 
 
 def spec_signature(spec: SpTTNSpec) -> str:
@@ -52,13 +54,18 @@ def device_kind() -> str:
 
 def cache_key(spec: SpTTNSpec,
               nnz_levels: Mapping[int, int],
-              device: str | None = None) -> str:
+              device: str | None = None,
+              backends: tuple[str, ...] = ("xla",)) -> str:
+    """``backends`` is the tuner's engine search axis: a plan tuned under
+    a forced/narrower axis (e.g. ``("pallas",)``) must never be served to
+    a search over a different axis, so the axis is part of the key."""
     doc = {
         "version": CACHE_VERSION,
         "spec": spec_signature(spec),
         "nnz_levels": {str(k): int(v)
                        for k, v in sorted(nnz_levels.items())},
         "device": device if device is not None else device_kind(),
+        "backends": list(backends),
     }
     blob = json.dumps(doc, sort_keys=True).encode()
     return hashlib.sha256(blob).hexdigest()

@@ -23,18 +23,25 @@ from repro.core.spec import SpTTNSpec
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
-    """One schedule the tuner may measure, with its model scores."""
+    """One schedule the tuner may measure, with its model scores.
+
+    ``backend`` is the execution engine the schedule would run on — a
+    full autotuning axis: the same (path, order) may win on one backend
+    and lose on another, so each (schedule, backend) pair is measured
+    separately and the winner's backend lands in the plan cache.
+    """
 
     path: ContractionPath
     order: LoopOrder
     cost: float          # model cost (TreeCost.evaluate — order-dependent)
     flops: float         # sparse-aware FLOP model (path-dependent)
+    backend: str = "xla"
 
     @property
     def key(self) -> str:
         terms = "|".join(str(t) for t in self.path)
         orders = ";".join(",".join(a) for a in self.order)
-        return f"{terms}#{orders}"
+        return f"{terms}#{orders}@{self.backend}"
 
 
 def default_nnz_levels(spec: SpTTNSpec) -> dict[int, int]:
@@ -54,13 +61,21 @@ def generate_candidates(spec: SpTTNSpec,
                         max_paths: int | None = 16,
                         depth_slack: int = 0,
                         max_candidates: int = 8,
-                        orders_per_path: int = 3) -> list[Candidate]:
+                        orders_per_path: int = 3,
+                        backends: Sequence[str] = ("xla",)
+                        ) -> list[Candidate]:
     """Generate the model-pruned candidate set, best-ranked first.
 
     Per path: the DP-optimal order always survives; ``orders_per_path - 1``
     further orders come from exhaustive enumeration (cheap for the paper's
     kernel sizes).  The final ranking is (cost, flops) ascending, truncated
-    to ``max_candidates``.
+    to ``max_candidates``, then expanded across ``backends`` (the cost
+    models are backend-blind, so every surviving schedule is measured on
+    every requested engine; the head of the expansion — best model score
+    on ``backends[0]`` — is the pure-model pick).  On an all-dense
+    network the Pallas backend degrades to XLA (the generator emits no
+    sparse stages there), so it is folded into the XLA candidate rather
+    than measured twice — the expansion is never empty.
     """
     cost = cost or ConstrainedBlas(bound=2)
     nnz_levels = dict(nnz_levels) if nnz_levels else default_nnz_levels(spec)
@@ -101,8 +116,23 @@ def generate_candidates(spec: SpTTNSpec,
                 spec, cost=MaxBufferSize(), nnz_levels=nnz_levels,
                 max_paths=max_paths, depth_slack=depth_slack,
                 max_candidates=max_candidates,
-                orders_per_path=orders_per_path)
+                orders_per_path=orders_per_path, backends=backends)
         raise ValueError(f"no feasible loop nest found for {spec}")
 
     out.sort(key=lambda c: (c.cost, c.flops, path_depth(c.path)))
-    return out[:max_candidates]
+    out = out[:max_candidates]
+    from repro.core.executor import BACKENDS
+    bad = [b for b in backends if b not in BACKENDS]
+    if bad:
+        raise ValueError(f"unknown backends {bad}; expected from {BACKENDS}")
+    expanded, seen_keys = [], set()
+    for c in out:
+        for b in backends:
+            if b == "pallas" and spec.sparse_input is None:
+                b = "xla"   # identical engines on an all-dense network
+            cand = dataclasses.replace(c, backend=b)
+            if cand.key in seen_keys:
+                continue
+            seen_keys.add(cand.key)
+            expanded.append(cand)
+    return expanded

@@ -1,9 +1,9 @@
 """Empirical candidate timing (paper §4.1: 'enumeration enables
 autotuning').
 
-Each candidate is compiled through :class:`VectorizedExecutor` + jax.jit,
-warmed up (absorbing compile time), then timed ``repeats`` times; the score
-is the median.  Early-exit pruning: once any candidate has finished, a
+Each candidate is compiled through its backend's engine (``make_executor``;
+XLA or generated Pallas) + jax.jit, warmed up (absorbing compile time),
+then timed ``repeats`` times; the score is the median.  Early-exit pruning: once any candidate has finished, a
 later candidate whose *first* timed call already exceeds
 ``prune_ratio x best_median`` is abandoned — the paper's kernels make the
 model ranking good enough that most losers die after one call.
@@ -73,7 +73,7 @@ def measure_candidates(spec: SpTTNSpec,
     """
     import jax
 
-    from repro.core.executor import VectorizedExecutor
+    from repro.core.executor import make_executor
 
     config = config or MeasureConfig()
     results: list[Measurement] = []
@@ -88,7 +88,8 @@ def measure_candidates(spec: SpTTNSpec,
         return time.perf_counter() - t0
 
     for cand in candidates:
-        ex = VectorizedExecutor(spec, cand.path, cand.order)
+        ex = make_executor(spec, cand.path, cand.order,
+                           backend=getattr(cand, "backend", "xla"))
         fn = jax.jit(lambda f, ex=ex: ex(arrays, f))
         for _ in range(config.warmup):
             run(fn)

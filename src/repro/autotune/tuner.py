@@ -27,7 +27,14 @@ from repro.core.spec import SpTTNSpec
 
 @dataclasses.dataclass
 class TunerConfig:
-    """Search-size knobs; defaults sized for the paper's kernels (n<=6)."""
+    """Search-size knobs; defaults sized for the paper's kernels (n<=6).
+
+    ``backends`` is the engine axis of the search (``None`` resolves via
+    :func:`default_backends`: XLA + generated Pallas on TPU, XLA alone
+    elsewhere — interpret-mode Pallas can never win wall-clock on CPU, so
+    measuring it there only slows the search; pass it explicitly to force
+    a pallas-backend plan, e.g. ``backends=("pallas",)``).
+    """
 
     max_paths: int | None = 16
     depth_slack: int = 0
@@ -38,6 +45,17 @@ class TunerConfig:
     prune_ratio: float = 2.0
     synth_density: float = 0.05   # for synthesized measurement tensors
     synth_seed: int = 0
+    backends: tuple[str, ...] | None = None
+
+
+def default_backends() -> tuple[str, ...]:
+    """Engine axis default: measure Pallas only where it can actually win
+    (compiled TPU kernels); everywhere else the XLA engine is the honest
+    wall-clock baseline and interpret-mode Pallas is validation-only."""
+    import jax
+    if jax.default_backend() == "tpu":
+        return ("xla", "pallas")
+    return ("xla",)
 
 
 @dataclasses.dataclass
@@ -88,8 +106,9 @@ def tune(spec: SpTTNSpec,
         csf.nnz_levels() if hasattr(csf, "nnz_levels")
         else default_nnz_levels(spec))
 
+    backends = config.backends or default_backends()
     cache = PlanCache(cache_dir) if cache_dir else None
-    key = cache_key(spec, levels, device_kind())
+    key = cache_key(spec, levels, device_kind(), backends=backends)
     stats.cache_key = key
     if cache is not None:
         hit = cache.get(key)
@@ -107,7 +126,8 @@ def tune(spec: SpTTNSpec,
         spec, cost=cost, nnz_levels=levels, max_paths=config.max_paths,
         depth_slack=config.depth_slack,
         max_candidates=config.max_candidates,
-        orders_per_path=config.orders_per_path)
+        orders_per_path=config.orders_per_path,
+        backends=backends)
     model_cand = candidates[0]
     stats.candidates_generated = len(candidates)
 
@@ -133,7 +153,8 @@ def tune(spec: SpTTNSpec,
     plan = SpTTNPlan(spec=spec, path=best.candidate.path,
                      order=best.candidate.order, cost=best.candidate.cost,
                      flops=best.candidate.flops,
-                     depth=path_depth(best.candidate.path))
+                     depth=path_depth(best.candidate.path),
+                     backend=best.candidate.backend)
 
     if cache is not None:
         cache.put(key, plan, meta={
@@ -142,9 +163,11 @@ def tune(spec: SpTTNSpec,
             "candidates_timed": stats.candidates_timed,
             "executions": stats.executions,
             "device": device_kind(),
+            "backends": list(backends),
             "timings": [
                 {"seconds": m.seconds, "pruned": m.pruned,
-                 "cost": m.candidate.cost, "flops": m.candidate.flops}
+                 "cost": m.candidate.cost, "flops": m.candidate.flops,
+                 "backend": m.candidate.backend}
                 for m in results],
         })
 

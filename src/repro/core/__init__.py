@@ -4,17 +4,22 @@ Public API:
   spec.parse / spec.mttkrp / ...      SpTTN kernel specs
   paths.min_depth_paths                contraction-path enumeration (§4.1.1)
   loopnest.enumerate_orders            index-order enumeration (§4.1.2)
+  enumerate.enumerate_loop_nests       exhaustive (path, order) space (§4.1)
   cost.{MaxBufferDim,MaxBufferSize,CacheMisses,ConstrainedBlas}   (§4.2)
   order_dp.optimal_order               Algorithm 1
   planner.plan / cached_plan           full pipeline (§5)
-  executor.{reference_execute,VectorizedExecutor,CSFArrays}       (Alg. 2)
+  executor.{reference_execute,VectorizedExecutor,make_executor}   (Alg. 2;
+    the three engines of DESIGN.md §3/§6 behind one signature)
 """
 from repro.core import cost, executor, loopnest, order_dp, paths
 from repro.core import planner, spec
 from repro.core.cost import (CacheMisses, ConstrainedBlas, MaxBufferDim,
                              MaxBufferSize)
-from repro.core.executor import (CSFArrays, VectorizedExecutor, dense_oracle,
-                                 execute_unfactorized, reference_execute)
+from repro.core.enumerate import brute_force_optimal, enumerate_loop_nests
+from repro.core.executor import (BACKENDS, CSFArrays, ReferenceExecutor,
+                                 VectorizedExecutor, dense_oracle,
+                                 execute_plan, execute_unfactorized,
+                                 make_executor, reference_execute)
 from repro.core.order_dp import optimal_order
 from repro.core.planner import SpTTNPlan, cached_plan, plan
 from repro.core.spec import SpTTNSpec, parse
@@ -22,7 +27,9 @@ from repro.core.spec import SpTTNSpec, parse
 __all__ = [
     "cost", "executor", "loopnest", "order_dp", "paths",
     "planner", "spec", "CacheMisses", "ConstrainedBlas", "MaxBufferDim",
-    "MaxBufferSize", "CSFArrays", "VectorizedExecutor", "dense_oracle",
-    "execute_unfactorized", "reference_execute", "optimal_order",
+    "MaxBufferSize", "BACKENDS", "CSFArrays", "ReferenceExecutor",
+    "VectorizedExecutor", "dense_oracle", "execute_plan",
+    "execute_unfactorized", "make_executor", "reference_execute",
+    "brute_force_optimal", "enumerate_loop_nests", "optimal_order",
     "SpTTNPlan", "cached_plan", "plan", "SpTTNSpec", "parse",
 ]

@@ -9,8 +9,10 @@ from typing import Iterator, Mapping, Sequence
 
 from repro.core.cost import TreeCost
 from repro.core.loopnest import LoopOrder, enumerate_orders
-from repro.core.paths import ContractionPath, SpTTNSpec, min_depth_paths
-from repro.core.spec import SpTTNSpec  # noqa: F811  (re-export convenience)
+from repro.core.paths import ContractionPath, min_depth_paths
+from repro.core.spec import SpTTNSpec
+
+__all__ = ["SpTTNSpec", "brute_force_optimal", "enumerate_loop_nests"]
 
 
 def enumerate_loop_nests(spec: SpTTNSpec,

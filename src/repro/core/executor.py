@@ -1,10 +1,10 @@
-"""SpTTN loop-nest execution (paper §5.1, Algorithm 2) — two engines.
+"""SpTTN loop-nest execution (paper §5.1, Algorithm 2) — three engines.
 
 1. :func:`reference_execute` — a *literal* implementation of Algorithm 2:
    recursive loop-nest generation over the CSF tree with buffer reset rules.
    Pure numpy, exponentially slow, used as the semantic oracle.
 
-2. :class:`VectorizedExecutor` — the production engine.  The same fused
+2. :class:`VectorizedExecutor` — the XLA engine.  The same fused
    loop-nest plan is compiled to a vectorized JAX program:
      * sparse loops          -> flattened fiber arrays (gather / segment_sum)
      * innermost dense loops -> a single einsum/dot_general (MXU; the
@@ -12,6 +12,11 @@
      * loop fusion depth     -> the CSF level at which each intermediate is
                                 materialized (nnz^(I1..Ip) x dense buffer)
    This is the TPU adaptation documented in DESIGN.md §3.
+
+3. ``backend="pallas"`` — :class:`repro.kernels.codegen.PallasPlanExecutor`,
+   a code generator that lowers the same plan to fused Pallas TPU kernels
+   (block-segment grids + VMEM accumulators, DESIGN.md §6).  Select an
+   engine with :func:`make_executor`; all three share one semantics.
 """
 from __future__ import annotations
 
@@ -32,11 +37,19 @@ from repro.core.spec import SpTTNSpec
 from repro.sparse.csf import CSFTensor, level_segments
 
 
+# The three execution engines (DESIGN.md §3/§6).  ``backend`` is a plan
+# attribute: the autotuner measures schedules per backend and the winner's
+# backend is persisted with the plan.
+BACKENDS = ("reference", "xla", "pallas")
+
+
 # =========================================================================== #
 # Plan serialization (DESIGN.md §4) — plans are pattern-static, so a chosen
 # schedule survives process restarts via the autotuner's disk cache.
+# Version 2 adds the ``backend`` field (any other version is rejected —
+# the forward/backward-compat rule is "re-plan, never guess").
 # =========================================================================== #
-PLAN_JSON_VERSION = 1
+PLAN_JSON_VERSION = 2
 
 
 def _operand_to_dict(op) -> dict:
@@ -69,6 +82,7 @@ def plan_to_dict(plan) -> dict:
         "cost": plan.cost,
         "flops": plan.flops,
         "depth": plan.depth,
+        "backend": plan.backend,
     }
 
 
@@ -87,8 +101,11 @@ def plan_from_dict(doc: dict):
                       out=_operand_from_dict(t["out"]))
                  for t in doc["path"])
     order = tuple(tuple(a) for a in doc["order"])
+    backend = doc.get("backend", "xla")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown plan backend {backend!r}")
     return SpTTNPlan(spec=spec, path=path, order=order, cost=doc["cost"],
-                     flops=doc["flops"], depth=doc["depth"])
+                     flops=doc["flops"], depth=doc["depth"], backend=backend)
 
 
 def _tensor_ref(d):
@@ -267,6 +284,7 @@ class CSFArrays:
     nfib: dict[int, int]
     order: int
     shape: tuple[int, ...]
+    host: "CSFTensor | None" = None   # source tensor (reference engine)
 
     @classmethod
     def from_csf(cls, csf: CSFTensor) -> "CSFArrays":
@@ -282,7 +300,7 @@ class CSFArrays:
         return cls(values=jnp.asarray(csf.values),
                    fiber_coord=fiber_coord, seg=seg,
                    nfib=dict(csf.nfib), order=csf.order,
-                   shape=csf.shape)
+                   shape=csf.shape, host=csf)
 
 
 class VectorizedExecutor:
@@ -445,7 +463,7 @@ class VectorizedExecutor:
         out_inds = spec.output.indices
         out_sp = [i for i in out_inds if i in self.spos]
         out_dense = tuple(i for i in out_inds if i not in self.spos)
-        arr = self._einsum(fa, da, fb, db, out_dense, fiber=True)
+        arr = self._fiber_contract(csf, fa, da, fb, db, out_dense, lvl, lvl)
         coords = tuple(csf.fiber_coord[lvl][self.spos[i]] for i in out_sp)
         shape = [spec.dims[i] for i in out_sp] + \
             [spec.dims[i] for i in out_dense]
@@ -458,7 +476,7 @@ class VectorizedExecutor:
     def _exec_fiber_term(self, csf: CSFArrays, term: Term,
                          a: "FiberVal | DenseVal",
                          b: "FiberVal | DenseVal") -> FiberVal:
-        """sparse-structured term: lift to the term's CSF level, einsum the
+        """sparse-structured term: lift to the term's CSF level, contract the
         dense dims (MXU), segment-reduce to the output's level."""
         lvl = self._sparse_level(term.indices)
         out_lvl = self._sparse_level(term.out.indices)
@@ -467,7 +485,23 @@ class VectorizedExecutor:
         fb, db = self._lift(csf, b, term.rhs, lvl)
         sp = set(self.spos)
         out_dense = tuple(i for i in term.out.indices if i not in sp)
-        # dense-contracted indices are handled inside one einsum (BLAS/MXU)
+        arr = self._fiber_contract(csf, fa, da, fb, db, out_dense, lvl,
+                                   out_lvl)
+        if out_lvl == 0:
+            return DenseVal(arr, out_dense)      # fully contracted prefix
+        return FiberVal(arr, out_lvl, out_dense)
+
+    def _fiber_contract(self, csf: CSFArrays, fa, da, fb, db,
+                        out_dense: tuple[str, ...], lvl: int,
+                        out_lvl: int) -> jnp.ndarray:
+        """Contract two level-``lvl`` operands and reduce to ``out_lvl``.
+
+        The overridable lowering unit shared by the XLA and Pallas engines:
+        dense-contracted indices collapse into one einsum (BLAS/MXU) and
+        the sparse reduction becomes a segmented sum.  ``out_lvl == lvl``
+        means no sparse reduction (per-fiber output); ``out_lvl == 0``
+        returns the dense array of shape ``out_dense``.
+        """
         arr = self._einsum(fa, da, fb, db, out_dense, fiber=True)
         if out_lvl < lvl:
             seg = csf.seg[(lvl, out_lvl)] if out_lvl > 0 else jnp.zeros(
@@ -480,8 +514,7 @@ class VectorizedExecutor:
                                       indices_are_sorted=True)
             if out_lvl == 0:
                 arr = arr[0]
-                return DenseVal(arr, out_dense)  # fully contracted prefix
-        return FiberVal(arr, out_lvl, out_dense)
+        return arr
 
 
 def execute_unfactorized(spec: SpTTNSpec, csf: CSFArrays,
@@ -539,3 +572,69 @@ def execute_unfactorized(spec: SpTTNSpec, csf: CSFArrays,
             per_leaf, unique_indices=True)
     perm = [full.index(i) for i in spec.output.indices]
     return jnp.transpose(out, perm) if perm != list(range(len(perm))) else out
+
+
+# =========================================================================== #
+# Engine registry
+# =========================================================================== #
+class ReferenceExecutor:
+    """Algorithm-2 interpreter behind the common executor signature.
+
+    Accepts a host :class:`CSFTensor` or a :class:`CSFArrays` built via
+    :meth:`CSFArrays.from_csf` (which retains the host tensor).  Output is
+    always the dense numpy array; sparse-pattern outputs are densified —
+    callers needing leaf values should use the vectorized engines.
+    """
+
+    def __init__(self, spec: SpTTNSpec, path: ContractionPath,
+                 order: LoopOrder):
+        self.spec = spec
+        self.path = path
+        self.order = order
+
+    def __call__(self, csf, factors: Mapping) -> np.ndarray:
+        if isinstance(csf, CSFArrays):
+            if csf.host is None:
+                raise ValueError(
+                    "reference backend needs the host CSFTensor; build "
+                    "CSFArrays via from_csf or pass the CSFTensor directly")
+            csf = csf.host
+        np_factors = {k: np.asarray(v) for k, v in factors.items()}
+        return reference_execute(self.spec, self.path, self.order, csf,
+                                 np_factors)
+
+
+def default_interpret() -> bool:
+    """Pallas kernels run in interpret mode everywhere but real TPUs."""
+    return jax.default_backend() != "tpu"
+
+
+def make_executor(spec: SpTTNSpec, path: ContractionPath, order: LoopOrder,
+                  backend: str = "xla", interpret: bool | None = None,
+                  **kwargs):
+    """Instantiate an execution engine for a (path, order) schedule.
+
+    All engines share the call signature ``ex(csf_arrays, factors)``.
+    ``backend`` is one of :data:`BACKENDS`; ``interpret=None`` resolves via
+    :func:`default_interpret` (True off-TPU).  Extra kwargs reach the
+    Pallas code generator (``block``, ``strategy``).
+    """
+    if backend == "xla":
+        return VectorizedExecutor(spec, path, order)
+    if backend == "pallas":
+        from repro.kernels.codegen import PallasPlanExecutor
+        return PallasPlanExecutor(spec, path, order, interpret=interpret,
+                                  **kwargs)
+    if backend == "reference":
+        return ReferenceExecutor(spec, path, order)
+    raise ValueError(f"unknown backend {backend!r}; expected one of "
+                     f"{BACKENDS}")
+
+
+def execute_plan(plan, csf, factors: Mapping, backend: str | None = None,
+                 **kwargs):
+    """Run an :class:`~repro.core.planner.SpTTNPlan` end to end, honoring
+    the plan's tuned backend unless overridden."""
+    ex = make_executor(plan.spec, plan.path, plan.order,
+                       backend=backend or plan.backend, **kwargs)
+    return ex(csf, factors)

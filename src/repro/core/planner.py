@@ -26,6 +26,9 @@ from repro.core.spec import SpTTNSpec
 class SpTTNPlan:
     """A chosen schedule: contraction path + loop order (+ diagnostics).
 
+    ``backend`` names the execution engine the schedule was selected for
+    (``repro.core.executor.BACKENDS``); the autotuner treats it as a search
+    axis, so a persisted plan replays on the engine it actually won on.
     ``stats`` is attached by autotuned planning (search/cache accounting);
     it is excluded from equality so a cache round trip compares identical.
     """
@@ -36,12 +39,13 @@ class SpTTNPlan:
     cost: float
     flops: float
     depth: int
+    backend: str = "xla"
     stats: object | None = dataclasses.field(default=None, compare=False,
                                              repr=False)
 
     def describe(self) -> str:  # pragma: no cover - debugging aid
         lines = [f"SpTTNPlan depth={self.depth} cost={self.cost} "
-                 f"flops={self.flops:.3g}"]
+                 f"flops={self.flops:.3g} backend={self.backend}"]
         for t, a in zip(self.path, self.order):
             lines.append(f"  {t}   order={','.join(a)}")
         return "\n".join(lines)

@@ -1,9 +1,12 @@
 # Pallas TPU kernels for the perf-critical compute layers, each with a
 # pure-jnp oracle in ref.py and a jit'd wrapper in ops.py:
-#   mttkrp / ttmc / tttp      — the paper's SpTTN hot loops (Eqs. 1-3)
+#   codegen/                  — generated fused kernels for ANY SpTTN plan
+#                               (the backend="pallas" engine, DESIGN.md §6)
+#   mttkrp / ttmc / tttp      — hand-written SpTTN hot loops (Eqs. 1-3);
+#                               regression fixtures for the generator
 #   grouped_matmul            — MoE expert GEMM (SpTTN-planned dispatch)
 #   wkv6 / rglru / local_attn — recurrence & block-sparse attention kernels
 # All validated in interpret mode on CPU; BlockSpecs are sized for v5e VMEM.
-from repro.kernels import ops, ref
+from repro.kernels import codegen, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["codegen", "ops", "ref"]

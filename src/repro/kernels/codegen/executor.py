@@ -1,0 +1,152 @@
+"""PallasPlanExecutor — lower any fused SpTTN plan to Pallas kernels.
+
+Structural sibling of :class:`~repro.core.executor.VectorizedExecutor`
+(it *is* one, by inheritance): operand lifting, dense fallbacks, and
+final-output materialization are shared, so the two engines agree by
+construction everywhere except the lowering unit — ``_fiber_contract``,
+where the XLA engine's einsum + ``segment_sum`` is replaced by generated
+Pallas stages (kernels/codegen/stages.py).
+
+Per reducing term the generator picks one of two lowerings from the
+static segment profile (pattern-known, so the choice is trace-time):
+
+* **row** — the mttkrp-style fused kernel: fibers padded per output
+  segment to block multiples (``padded_segment_layout`` at arbitrary
+  (lvl, out_lvl), not just leaf->root), output row accumulated in VMEM
+  with the Algorithm-2 reset.  Chosen when segments are block-sized —
+  padding stays bounded.
+* **segsum** — a fused product stage (hadamard/dot in VMEM) followed by
+  an XLA segmented sum.  Chosen when segments are tiny (e.g. leaf ->
+  next level), where block-per-segment padding would explode.
+
+Gathers stay in XLA on purpose: TPU-native big fast gathers feed the
+kernels, matching the hand-written MTTKRP kernel this module retires as
+a special case (it survives as the generator's regression fixture).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.executor import (CSFArrays, VectorizedExecutor,
+                                 default_interpret)
+from repro.core.loopnest import LoopOrder
+from repro.core.paths import ContractionPath
+from repro.core.spec import SpTTNSpec
+from repro.kernels.codegen.stages import (Stage, StageOperand,
+                                          run_product_stage,
+                                          run_reduce_stage)
+from repro.kernels.util import padded_segment_layout, round_up
+
+DEFAULT_BLOCK = 128
+
+
+class PallasPlanExecutor(VectorizedExecutor):
+    """Execute a (path, order) plan through generated Pallas kernels.
+
+    ``strategy`` forces the reduction lowering (``"row"``/``"segsum"``)
+    for tests; ``"auto"`` picks per stage from the segment profile.
+    ``interpret=None`` resolves to True off-TPU (CPU validation mode).
+    """
+
+    def __init__(self, spec: SpTTNSpec, path: ContractionPath,
+                 order: LoopOrder, block: int = DEFAULT_BLOCK,
+                 interpret: bool | None = None, strategy: str = "auto"):
+        super().__init__(spec, path, order)
+        if strategy not in ("auto", "row", "segsum"):
+            raise ValueError(f"unknown strategy {strategy!r}")
+        self.block = block
+        self.interpret = default_interpret() if interpret is None \
+            else interpret
+        self.strategy = strategy
+
+    # -- static layouts (pattern-fixed, cached on the CSFArrays) -------- #
+    def _layout(self, csf: CSFArrays, lvl: int, out_lvl: int):
+        cache = csf.__dict__.setdefault("_codegen_layouts", {})
+        key = (lvl, out_lvl, self.block)
+        if key not in cache:
+            seg = np.asarray(csf.seg[(lvl, out_lvl)])
+            nseg = csf.nfib[out_lvl] if out_lvl > 0 else 1
+            lay = padded_segment_layout(seg, nseg, self.block)
+            cache[key] = (lay, jnp.asarray(lay.gather),
+                          jnp.asarray(lay.mask)[:, None],
+                          jnp.asarray(lay.block_seg),
+                          jnp.asarray(lay.block_first))
+        return cache[key]
+
+    def _use_row(self, csf: CSFArrays, lvl: int, out_lvl: int) -> bool:
+        if self.strategy != "auto":
+            return self.strategy == "row"
+        nseg = csf.nfib[out_lvl] if out_lvl > 0 else 1
+        nfib = csf.nfib[lvl]
+        # block-per-segment padding must stay within ~4x of the fiber
+        # count (small kernels always qualify via the absolute floor)
+        return nseg * self.block <= max(4 * nfib, 4 * self.block)
+
+    # -- the lowering unit ---------------------------------------------- #
+    def _fiber_contract(self, csf: CSFArrays, fa, da, fb, db,
+                        out_dense: tuple[str, ...], lvl: int,
+                        out_lvl: int) -> jnp.ndarray:
+        dims = self.spec.dims
+        nfib = csf.nfib[lvl]
+        oshape = tuple(dims[i] for i in out_dense)
+        dtype = jnp.result_type(fa.dtype, fb.dtype)
+        reduce_ = out_lvl < lvl
+
+        if nfib == 0:
+            if out_lvl == 0:
+                return jnp.zeros(oshape, dtype)
+            rows = csf.nfib[out_lvl] if reduce_ else 0
+            return jnp.zeros((rows,) + oshape, dtype)
+
+        operands, arrays = [], []
+        for arr, inds in ((fa, da), (fb, db)):
+            shape = tuple(dims[i] for i in inds)
+            fiber = arr.ndim == len(inds) + 1
+            operands.append(StageOperand(
+                subs="".join(self._letter[i] for i in inds),
+                shape=shape, fiber=fiber))
+            arrays.append(arr)
+        out_subs = "".join(self._letter[i] for i in out_dense)
+
+        if reduce_ and self._use_row(csf, lvl, out_lvl):
+            lay, gather, mask, block_seg, block_first = \
+                self._layout(csf, lvl, out_lvl)
+            padded = [
+                arr.reshape(nfib, -1)[gather] if op.fiber
+                else arr.reshape(1, -1)
+                for arr, op in zip(arrays, operands)]
+            stage = Stage(operands=tuple(operands), out_subs=out_subs,
+                          out_shape=oshape, reduce=True, block=self.block,
+                          nseg=lay.nseg, interpret=self.interpret)
+            out2d = run_reduce_stage(stage, block_seg, block_first, mask,
+                                     padded, dtype)
+            arr = out2d.reshape((lay.nseg,) + oshape)
+            return arr.reshape(oshape) if out_lvl == 0 else arr
+
+        # product stage: fused per-fiber contraction; sparse reduction (if
+        # any) stays an XLA segmented scan over sorted CSF segment ids
+        P = round_up(nfib, self.block)
+        padded = []
+        for arr, op in zip(arrays, operands):
+            if op.fiber:
+                flat = arr.reshape(nfib, -1)
+                padded.append(jnp.pad(flat, ((0, P - nfib), (0, 0))))
+            else:
+                padded.append(arr.reshape(1, -1))
+        stage = Stage(operands=tuple(operands), out_subs=out_subs,
+                      out_shape=oshape, reduce=False, block=self.block,
+                      nseg=0, interpret=self.interpret)
+        per_fiber = run_product_stage(stage, padded, dtype)
+        arr = per_fiber[:nfib].reshape((nfib,) + oshape)
+        if reduce_:
+            seg = csf.seg[(lvl, out_lvl)] if out_lvl > 0 else jnp.zeros(
+                nfib, jnp.int32)
+            nseg = csf.nfib[out_lvl] if out_lvl > 0 else 1
+            arr = jax.ops.segment_sum(arr, seg, num_segments=nseg,
+                                      indices_are_sorted=True)
+            if out_lvl == 0:
+                arr = arr[0]
+        return arr

@@ -1,0 +1,170 @@
+"""Pallas stage emitters — the code generator's instruction set.
+
+A fused SpTTN plan lowers to a sequence of *stages*, one per sparse
+contraction term (DESIGN.md §6).  Every stage is a scalar-prefetched
+block-segment grid over level-``lvl`` CSF fibers, generalizing the
+hand-written MTTKRP kernel's ``block_seg``/``block_first`` machinery
+(kernels/util.py) to arbitrary CSF depth and arbitrary dense index
+structure:
+
+* the per-fiber dense contraction is one in-kernel ``jnp.einsum`` —
+  traced to ``dot_general`` on the MXU (the paper's BLAS offload);
+* a *reducing* stage accumulates block partials into its output-row
+  crossing buffer, which lives in VMEM across the sequential grid and is
+  zeroed exactly when a new segment's first block arrives — Algorithm 2's
+  buffer-reset rule, keyed off the scalar-prefetched ``block_first``;
+* a *product* stage keeps the fiber axis (same-level output, e.g. the
+  TTTP leaf or a final scatter term) and writes blocks 1:1.
+
+Stages are pure descriptions (shapes, subscripts, block size); emission
+happens at trace time, so one jit of the enclosing executor compiles the
+whole plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+@dataclasses.dataclass(frozen=True)
+class StageOperand:
+    """One kernel input: ``subs`` are the dense-axis einsum letters,
+    ``shape`` the dense shape.  ``fiber`` operands carry the padded fiber
+    axis (einsum batch letter Z) and arrive as (P, prod(shape)) blocks;
+    broadcast operands arrive as one (1, prod(shape)) block shared by
+    every grid step."""
+
+    subs: str
+    shape: tuple[int, ...]
+    fiber: bool
+
+    @property
+    def flat_dim(self) -> int:
+        return math.prod(self.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """A single generated kernel: ``einsum(operands) -> out_subs`` per
+    block, reduced over the fiber axis into ``nseg`` segment rows when
+    ``reduce`` is set."""
+
+    operands: tuple[StageOperand, ...]
+    out_subs: str
+    out_shape: tuple[int, ...]
+    reduce: bool
+    block: int
+    nseg: int            # segment-row count (reduce stages only)
+    interpret: bool
+
+    @property
+    def out_flat_dim(self) -> int:
+        return math.prod(self.out_shape)
+
+    @property
+    def expr(self) -> str:
+        ins = ",".join(("Z" + op.subs) if op.fiber else op.subs
+                       for op in self.operands)
+        return f"{ins}->{'' if self.reduce else 'Z'}{self.out_subs}"
+
+
+def _load_operands(stage: Stage, in_refs, mask_ref):
+    """Read each operand block and restore its dense shape; the mask is
+    folded into the first fiber operand so pad slots contribute zero."""
+    vals = []
+    masked = mask_ref is None
+    for ref, op in zip(in_refs, stage.operands):
+        v = ref[...]
+        if op.fiber:
+            v = v.reshape((stage.block,) + op.shape)
+            if not masked:
+                m = mask_ref[...].reshape(
+                    (stage.block,) + (1,) * len(op.shape))
+                v = v * m.astype(v.dtype)
+                masked = True
+        else:
+            v = v.reshape(op.shape)
+        vals.append(v)
+    return vals
+
+
+def run_reduce_stage(stage: Stage, block_seg: jnp.ndarray,
+                     block_first: jnp.ndarray, mask: jnp.ndarray,
+                     padded, dtype) -> jnp.ndarray:
+    """Fused contract-and-accumulate: grid over padded fiber blocks, output
+    row (the crossing buffer) resident in VMEM and revisited across its
+    blocks; ``block_first`` fires the Algorithm-2 reset."""
+
+    def kernel(bs_ref, bf_ref, m_ref, *refs):
+        in_refs, o_ref = refs[:-1], refs[-1]
+        b = pl.program_id(0)
+
+        @pl.when(bf_ref[b] == 1)
+        def _reset():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        vals = _load_operands(stage, in_refs, m_ref)
+        part = jnp.einsum(stage.expr, *vals,
+                          preferred_element_type=jnp.float32)
+        o_ref[...] += part.reshape(1, stage.out_flat_dim).astype(o_ref.dtype)
+
+    P = mask.shape[0]
+    in_specs = [pl.BlockSpec((stage.block, 1), lambda i, bs, bf: (i, 0))]
+    for op in stage.operands:
+        if op.fiber:
+            in_specs.append(pl.BlockSpec((stage.block, op.flat_dim),
+                                         lambda i, bs, bf: (i, 0)))
+        else:
+            in_specs.append(pl.BlockSpec((1, op.flat_dim),
+                                         lambda i, bs, bf: (0, 0)))
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(P // stage.block,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, stage.out_flat_dim),
+                               lambda i, bs, bf: (bs[i], 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((stage.nseg, stage.out_flat_dim),
+                                       dtype),
+        interpret=stage.interpret,
+    )(block_seg, block_first, mask, *padded)
+
+
+def run_product_stage(stage: Stage, padded, dtype) -> jnp.ndarray:
+    """Per-fiber fused product (no sparse reduction): blocks map 1:1 to
+    output blocks; pad rows are sliced off by the caller."""
+
+    def kernel(*refs):
+        in_refs, o_ref = refs[:-1], refs[-1]
+        vals = _load_operands(stage, in_refs, None)
+        part = jnp.einsum(stage.expr, *vals,
+                          preferred_element_type=jnp.float32)
+        o_ref[...] = part.reshape(stage.block,
+                                  stage.out_flat_dim).astype(o_ref.dtype)
+
+    P = next(a.shape[0] for a, op in zip(padded, stage.operands) if op.fiber)
+    in_specs = []
+    for op in stage.operands:
+        if op.fiber:
+            in_specs.append(pl.BlockSpec((stage.block, op.flat_dim),
+                                         lambda i: (i, 0)))
+        else:
+            in_specs.append(pl.BlockSpec((1, op.flat_dim),
+                                         lambda i: (0, 0)))
+    return pl.pallas_call(
+        kernel,
+        grid=(P // stage.block,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((stage.block, stage.out_flat_dim),
+                               lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, stage.out_flat_dim), dtype),
+        interpret=stage.interpret,
+    )(*padded)

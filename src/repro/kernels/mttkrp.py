@@ -1,5 +1,10 @@
 """Pallas TPU kernel: fused MTTKRP leaf stage (paper Eq. 1 / Listing 3).
 
+Historically the one hand-fused SpTTN kernel; kernels/codegen/ now emits
+this shape of kernel (and every other plan's) generically, so this file's
+job is to be the generator's first regression fixture: tests check it and
+the generated kernels against ``reference_execute`` on the same inputs.
+
 Computes  out[s, :] += vals[n] * B[j_n, :] * C[k_n, :]  segment-summed over
 the static CSF segments.  The factor rows are gathered by XLA outside the
 kernel (TPU-native: big fast gathers), while the kernel fuses the 3-way

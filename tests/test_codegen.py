@@ -1,0 +1,311 @@
+"""Pallas codegen backend: generated kernels for arbitrary SpTTN plans
+must match the Algorithm-2 reference interpreter (and the dense oracle)
+on every paper kernel, under both reduction-lowering strategies, and the
+backend must round-trip through plan JSON v2, the autotuner, and the
+disk plan cache.  All Pallas execution is interpret-mode (CPU container;
+TPU is the compile target)."""
+import itertools
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.autotune import TunerConfig, generate_candidates, tune
+from repro.core import spec as S
+from repro.core.executor import (BACKENDS, CSFArrays, PLAN_JSON_VERSION,
+                                 dense_oracle, execute_plan, make_executor,
+                                 plan_from_dict, plan_from_json,
+                                 plan_to_dict, plan_to_json,
+                                 reference_execute)
+from repro.core.loopnest import enumerate_orders
+from repro.core.paths import min_depth_paths
+from repro.core.planner import plan
+from repro.kernels import ops
+from repro.kernels.codegen import PallasPlanExecutor
+from repro.sparse import build_csf, random_sparse
+
+
+def _factors(spec, rng):
+    return {t.name: rng.standard_normal(
+        [spec.dims[i] for i in t.indices]).astype(np.float32)
+        for t in spec.inputs if not t.is_sparse}
+
+
+def _densify(spec, csf, out):
+    if not spec.output_is_sparse:
+        return np.asarray(out)
+    dense = np.zeros([spec.dims[i] for i in spec.output.indices])
+    dense[tuple(csf.coo.coords.T)] = np.asarray(out)
+    return dense
+
+
+# the four paper kernels of §2.3/§7 (+ the order-4/order-2 variants)
+PAPER_KERNELS = [
+    pytest.param(S.mttkrp(6, 7, 8, 4), 0.3, id="mttkrp"),
+    pytest.param(S.ttmc3(6, 7, 8, 4, 3), 0.3, id="ttmc"),
+    pytest.param(S.tttp3(6, 7, 8, 4), 0.3, id="tttp"),
+    pytest.param(S.tttc6(4, 3), 0.02, id="tttc"),
+    pytest.param(S.ttmc4(4, 5, 6, 7, 3, 2, 2), 0.2, id="ttmc4"),
+    pytest.param(S.sddmm(6, 7, 4), 0.3, id="sddmm"),
+]
+
+
+@pytest.mark.parametrize("spec,density", PAPER_KERNELS)
+def test_pallas_matches_reference_on_paper_kernels(spec, density):
+    """Acceptance bar: generated Pallas (interpret) == reference_execute
+    to 1e-5 on the planner's chosen schedule for every paper kernel."""
+    rng = np.random.default_rng(1)
+    shape = tuple(spec.dims[i] for i in spec.sparse_indices)
+    csf = build_csf(random_sparse(shape, density, seed=3))
+    factors = _factors(spec, rng)
+    arrays = CSFArrays.from_csf(csf)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ref = reference_execute(spec, p.path, p.order, csf, factors)
+    ex = make_executor(spec, p.path, p.order, backend="pallas",
+                       block=16, interpret=True)
+    out = _densify(spec, csf, ex(arrays, factors))
+    np.testing.assert_allclose(out, ref, atol=1e-5, err_msg=str(spec))
+    np.testing.assert_allclose(out, dense_oracle(spec, csf, factors),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("strategy", ["row", "segsum"])
+def test_reduction_strategies_agree(strategy):
+    """Both reduction lowerings (fused VMEM row accumulation vs fused
+    product + XLA segmented sum) compute the same answer."""
+    spec = S.mttkrp(10, 8, 6, 4)
+    csf = build_csf(random_sparse((10, 8, 6), 0.25, seed=7))
+    rng = np.random.default_rng(2)
+    factors = _factors(spec, rng)
+    arrays = CSFArrays.from_csf(csf)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ref = reference_execute(spec, p.path, p.order, csf, factors)
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8,
+                            interpret=True, strategy=strategy)
+    np.testing.assert_allclose(np.asarray(ex(arrays, factors)), ref,
+                               atol=1e-5)
+
+
+def test_pallas_sweep_over_enumerated_loop_nests():
+    """The generator handles arbitrary (path, order) schedules, not just
+    the planner's pick — a few per paper kernel against the reference."""
+    rng = np.random.default_rng(3)
+    for spec, density in [(S.mttkrp(6, 7, 8, 4), 0.3),
+                          (S.ttmc3(6, 7, 8, 4, 3), 0.3)]:
+        shape = tuple(spec.dims[i] for i in spec.sparse_indices)
+        csf = build_csf(random_sparse(shape, density, seed=5))
+        factors = _factors(spec, rng)
+        arrays = CSFArrays.from_csf(csf)
+        for path in min_depth_paths(spec, max_paths=3, slack=1):
+            for order in itertools.islice(
+                    enumerate_orders(path, spec.sparse_indices), 3):
+                ex = PallasPlanExecutor(spec, path, order, block=8,
+                                        interpret=True)
+                ref = reference_execute(spec, path, order, csf, factors)
+                np.testing.assert_allclose(
+                    np.asarray(ex(arrays, factors)), ref, atol=1e-5,
+                    err_msg=str([str(t) for t in path]) + str(order))
+
+
+def test_pallas_jit_and_single_nnz():
+    spec = S.mttkrp(6, 7, 8, 4)
+    rng = np.random.default_rng(4)
+    factors = {k: jnp.asarray(v) for k, v in _factors(spec, rng).items()}
+    from repro.sparse.coo import from_coords
+    csf = build_csf(from_coords(np.array([[1, 2, 3]]),
+                                np.array([2.0], np.float32), (6, 7, 8)))
+    arrays = CSFArrays.from_csf(csf)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8, interpret=True)
+    fn = jax.jit(lambda f: ex(arrays, f))
+    out = np.asarray(fn(factors))
+    np.testing.assert_allclose(
+        out, dense_oracle(spec, csf,
+                          {k: np.asarray(v) for k, v in factors.items()}),
+        atol=1e-5)
+    np.testing.assert_allclose(out, np.asarray(fn(factors)))  # cached call
+
+
+def test_handwritten_mttkrp_is_a_regression_fixture():
+    """The retired special case: ops.mttkrp (hand-fused leaf kernel) must
+    agree with reference_execute and with the generated kernel."""
+    spec = S.mttkrp(12, 10, 8, 8)
+    csf = build_csf(random_sparse((12, 10, 8), 0.1, seed=7))
+    rng = np.random.default_rng(5)
+    factors = _factors(spec, rng)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ref = reference_execute(spec, p.path, p.order, csf, factors)
+    # the leaf kernel emits one row per nonempty level-1 fiber; scatter
+    # rows to their i coordinates for the dense comparison
+    rows = np.asarray(ops.mttkrp(csf, jnp.asarray(factors["B"]),
+                                 jnp.asarray(factors["C"]), block=8,
+                                 use_pallas=True))
+    hand = np.zeros_like(ref)
+    hand[csf.coord[1]] = rows
+    np.testing.assert_allclose(hand, ref, atol=1e-4)
+    gen = np.asarray(PallasPlanExecutor(spec, p.path, p.order, block=8,
+                                        interpret=True)(
+        CSFArrays.from_csf(csf), factors))
+    np.testing.assert_allclose(gen, ref, atol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# backend registry + plan JSON v2
+# --------------------------------------------------------------------- #
+def test_make_executor_backends_share_semantics():
+    spec = S.ttmc3(6, 7, 8, 4, 3)
+    csf = build_csf(random_sparse((6, 7, 8), 0.3, seed=9))
+    rng = np.random.default_rng(6)
+    factors = _factors(spec, rng)
+    arrays = CSFArrays.from_csf(csf)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    outs = {b: _densify(spec, csf,
+                        make_executor(spec, p.path, p.order, backend=b,
+                                      **({"block": 8} if b == "pallas"
+                                         else {}))(arrays, factors))
+            for b in BACKENDS}
+    for b, out in outs.items():
+        np.testing.assert_allclose(out, outs["reference"], atol=1e-5,
+                                   err_msg=b)
+    with pytest.raises(ValueError, match="unknown backend"):
+        make_executor(spec, p.path, p.order, backend="triton")
+
+
+def test_plan_json_v2_round_trip_with_backend():
+    spec = S.mttkrp(8, 6, 5, 3)
+    p = plan(spec)
+    import dataclasses
+    tagged = dataclasses.replace(p, backend="pallas")
+    doc = plan_to_dict(tagged)
+    assert doc["version"] == PLAN_JSON_VERSION == 2
+    assert doc["backend"] == "pallas"
+    rt = plan_from_json(plan_to_json(tagged))
+    assert rt == tagged and rt.backend == "pallas"
+    # a plan serialized without an explicit backend defaults to xla
+    doc2 = plan_to_dict(p)
+    del doc2["backend"]
+    assert plan_from_dict(doc2).backend == "xla"
+
+
+@pytest.mark.parametrize("version", [1, 3, None, "2"])
+def test_plan_json_rejects_foreign_versions(version):
+    """Forward/backward compat is re-plan-never-guess: any version other
+    than the current one is rejected outright."""
+    spec = S.mttkrp(8, 6, 5, 3)
+    doc = plan_to_dict(plan(spec))
+    doc["version"] = version
+    with pytest.raises(ValueError, match="unsupported plan version"):
+        plan_from_dict(doc)
+
+
+def test_plan_json_rejects_unknown_backend():
+    doc = plan_to_dict(plan(S.mttkrp(8, 6, 5, 3)))
+    doc["backend"] = "cuda"
+    with pytest.raises(ValueError, match="unknown plan backend"):
+        plan_from_dict(doc)
+
+
+# --------------------------------------------------------------------- #
+# backend as an autotuning axis
+# --------------------------------------------------------------------- #
+FAST = TunerConfig(max_paths=2, max_candidates=2, orders_per_path=1,
+                   warmup=1, repeats=2, backends=("xla", "pallas"))
+
+
+def _mttkrp_inputs():
+    spec = S.mttkrp(16, 12, 10, 4)
+    csf = build_csf(random_sparse((16, 12, 10), 0.1, seed=3))
+    rng = np.random.default_rng(0)
+    factors = {t.name: jnp.asarray(rng.standard_normal(
+        [spec.dims[i] for i in t.indices]).astype(np.float32))
+        for t in spec.inputs if not t.is_sparse}
+    return spec, csf, factors
+
+
+def test_cache_key_includes_backend_axis(tmp_path):
+    """A plan tuned under a forced backend axis must not be served as a
+    cache hit to a search over a different axis."""
+    from repro.autotune import cache_key
+    spec, csf, factors = _mttkrp_inputs()
+    levels = csf.nnz_levels()
+    assert (cache_key(spec, levels, "cpu:x", backends=("pallas",)) !=
+            cache_key(spec, levels, "cpu:x", backends=("xla",)))
+    forced = TunerConfig(max_paths=2, max_candidates=1, orders_per_path=1,
+                         warmup=1, repeats=2, backends=("pallas",))
+    xla_only = TunerConfig(max_paths=2, max_candidates=1,
+                           orders_per_path=1, warmup=1, repeats=2,
+                           backends=("xla",))
+    p1 = plan(spec, autotune=True, cache_dir=str(tmp_path), csf=csf,
+              factors=factors, tuner=forced)
+    p2 = plan(spec, autotune=True, cache_dir=str(tmp_path), csf=csf,
+              factors=factors, tuner=xla_only)
+    assert p1.backend == "pallas"
+    assert not p2.stats.cache_hit and p2.backend == "xla"
+
+
+def test_all_dense_network_folds_pallas_into_xla():
+    """backends=("pallas",) on an all-dense spec must not empty the
+    candidate set — the generator has no sparse stages there, so the
+    candidate degrades to the identical XLA engine."""
+    spec = S.parse("ij,jk->ik", dims={"i": 6, "j": 5, "k": 4}, sparse=None)
+    cands = generate_candidates(spec, max_paths=2, max_candidates=2,
+                                orders_per_path=1, backends=("pallas",))
+    assert cands and all(c.backend == "xla" for c in cands)
+    both = generate_candidates(spec, max_paths=2, max_candidates=2,
+                               orders_per_path=1,
+                               backends=("xla", "pallas"))
+    assert both and all(c.backend == "xla" for c in both)
+    assert len({c.key for c in both}) == len(both)   # no double-measure
+
+
+def test_candidates_expand_across_backends():
+    spec, csf, _ = _mttkrp_inputs()
+    cands = generate_candidates(spec, nnz_levels=csf.nnz_levels(),
+                                max_paths=2, max_candidates=3,
+                                orders_per_path=1,
+                                backends=("xla", "pallas"))
+    assert {c.backend for c in cands} == {"xla", "pallas"}
+    assert len({c.key for c in cands}) == len(cands)
+    assert cands[0].backend == "xla"      # model pick is on backends[0]
+    with pytest.raises(ValueError, match="unknown backends"):
+        generate_candidates(spec, backends=("cuda",))
+
+
+def test_autotune_can_return_pallas_backend_plan(tmp_path):
+    spec, csf, factors = _mttkrp_inputs()
+    tuned, stats = tune(spec, csf=csf, factors=factors, config=FAST)
+    assert tuned.backend in ("xla", "pallas")
+    assert stats.candidates_timed >= 2    # both backends reached the timer
+
+    forced = TunerConfig(max_paths=2, max_candidates=2, orders_per_path=1,
+                         warmup=1, repeats=2, backends=("pallas",))
+    p1 = plan(spec, autotune=True, cache_dir=str(tmp_path), csf=csf,
+              factors=factors, tuner=forced)
+    assert p1.backend == "pallas" and not p1.stats.cache_hit
+    # the winner (and its backend) is what lands in the plan cache
+    p2 = plan(spec, autotune=True, cache_dir=str(tmp_path), csf=csf,
+              factors=factors, tuner=forced)
+    assert p2.stats.cache_hit and p2.backend == "pallas"
+    assert p1 == p2
+    # and the persisted plan executes on its tuned backend
+    out = execute_plan(p2, CSFArrays.from_csf(csf), factors, block=8)
+    oracle = dense_oracle(spec, csf,
+                          {k: np.asarray(v) for k, v in factors.items()})
+    np.testing.assert_allclose(np.asarray(out), oracle, atol=1e-4)
+
+
+def test_cached_plan_meta_records_backends(tmp_path):
+    spec, csf, factors = _mttkrp_inputs()
+    import os
+    plan(spec, autotune=True, cache_dir=str(tmp_path), csf=csf,
+         factors=factors, tuner=FAST)
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".json")]
+    assert len(files) == 1
+    with open(tmp_path / files[0]) as f:
+        doc = json.load(f)
+    assert doc["plan"]["version"] == 2
+    assert set(doc["meta"]["backends"]) == {"xla", "pallas"}
+    assert all("backend" in t for t in doc["meta"]["timings"])
