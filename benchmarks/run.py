@@ -5,6 +5,7 @@
   Fig 10c -> bench_index_order   Alg 1          -> bench_search
   Fig 9/10b -> bench_strong_scaling (opt-in: SCALING=1, spawns subprocesses)
   MoE-SpTTN integration          -> bench_moe_dispatch
+  §5.2 + DESIGN.md §7            -> bench_dist (1-vs-N tuned plan replay)
 
 Prints ``name,...,us_per_call,derived`` CSV rows.  SCALE env var shrinks or
 grows tensor sizes (default 0.5 keeps the suite under ~2 min on CPU).
@@ -48,9 +49,10 @@ def medians(results: dict) -> dict:
 
 def main() -> int:
     scale = float(os.environ.get("SCALE", "0.5"))
-    from benchmarks import (bench_index_order, bench_moe_dispatch,
-                            bench_mttkrp, bench_search, bench_strong_scaling,
-                            bench_tttc, bench_tttp, bench_ttmc)
+    from benchmarks import (bench_dist, bench_index_order,
+                            bench_moe_dispatch, bench_mttkrp, bench_search,
+                            bench_strong_scaling, bench_tttc, bench_tttp,
+                            bench_ttmc)
 
     suites = [
         ("mttkrp", lambda: bench_mttkrp.run(scale=scale)),
@@ -62,6 +64,7 @@ def main() -> int:
         ("search", bench_search.run),
         ("autotune", bench_search.run_autotune),
         ("moe_dispatch", bench_moe_dispatch.run),
+        ("dist", lambda: bench_dist.run(scale=scale)),
     ]
     if os.environ.get("SCALING", "0") == "1":
         suites.append(("strong_scaling", bench_strong_scaling.run))

@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Intra-repo link checker for the CI docs lane.
+
+Scans every tracked markdown file for inline links/images
+(``[text](target)``) and fails when a *relative* target does not exist on
+disk, resolved against the file that contains it.  External schemes
+(http/https/mailto) and pure in-page anchors (``#section``) are skipped —
+this gate is about repo-internal rot, not the internet.  ``path#anchor``
+targets are checked for the file part only.
+
+Usage:
+  python scripts/check_doc_links.py [root]      # default: repo root
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline markdown link/image: [text](target) / ![alt](target); stops at
+# the first unescaped ')' so titles ("...") are carried and stripped below
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache", "node_modules"}
+
+
+def md_files(root: str) -> list[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        out.extend(os.path.join(dirpath, f) for f in filenames
+                   if f.endswith(".md"))
+    return sorted(out)
+
+
+def broken_links(path: str, root: str) -> list[tuple[int, str]]:
+    bad = []
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, start=1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+                    continue
+                file_part = target.split("#", 1)[0]
+                if not file_part:
+                    continue
+                if file_part.startswith("/"):
+                    resolved = os.path.join(root, file_part.lstrip("/"))
+                else:
+                    resolved = os.path.join(os.path.dirname(path), file_part)
+                if not os.path.exists(resolved):
+                    bad.append((lineno, target))
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    root = os.path.abspath(argv[1]) if len(argv) > 1 else os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))
+    files = md_files(root)
+    failures = 0
+    for path in files:
+        for lineno, target in broken_links(path, root):
+            rel = os.path.relpath(path, root)
+            print(f"BROKEN LINK {rel}:{lineno}: ({target})")
+            failures += 1
+    print(f"checked {len(files)} markdown files: "
+          f"{failures} broken intra-repo link(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -4,7 +4,8 @@ Plans depend only on the *fixed* sparsity pattern (paper §1), never on
 values, so a tuned schedule is reusable across process restarts and across
 tensors sharing a pattern.  The key is a content hash of
 
-  (spec signature, CSF nnz-level profile, device kind, CACHE_VERSION)
+  (spec signature, CSF nnz-level profile, device kind, backend axis,
+   mesh/shard context, CACHE_VERSION)
 
 - spec signature: canonical kernel string incl. names, dims, sparse marker;
 - nnz-level profile: {p: nnz^(I1..Ip)} — the exact quantity every cost
@@ -12,6 +13,9 @@ tensors sharing a pattern.  The key is a content hash of
   equivalent by construction (values never enter);
 - device kind: platform + device model, since the empirically best nest is
   hardware-specific;
+- mesh/shard context: mesh shape + partitioned axes + shard index for a
+  distributed shard-local search (None for single-device), so a sharded
+  pattern never reuses a single-device winner (DESIGN.md §7);
 - CACHE_VERSION: bumped whenever plan semantics / serialization change —
   the invalidation rule for stale entries (old files are simply unmatched,
   never read).
@@ -31,9 +35,12 @@ from typing import Mapping
 
 from repro.core.spec import SpTTNSpec
 
-# v2: plans carry a tuned ``backend`` (PLAN_JSON_VERSION 2); v1 entries
-# deserialize to a different schema and must be unmatched, never read.
-CACHE_VERSION = 2
+# v2: plans carry a tuned ``backend`` (PLAN_JSON_VERSION 2).  v3: the key
+# gains a ``mesh`` component (mesh shape + partitioned axes + shard index,
+# DESIGN.md §7) and plans carry the mesh/shard fields (PLAN_JSON_VERSION
+# 3).  Older entries deserialize to a different schema and must be
+# unmatched, never read.
+CACHE_VERSION = 3
 
 
 def spec_signature(spec: SpTTNSpec) -> str:
@@ -55,10 +62,33 @@ def device_kind() -> str:
 def cache_key(spec: SpTTNSpec,
               nnz_levels: Mapping[int, int],
               device: str | None = None,
-              backends: tuple[str, ...] = ("xla",)) -> str:
+              backends: tuple[str, ...] = ("xla",),
+              mesh: Mapping | None = None) -> str:
     """``backends`` is the tuner's engine search axis: a plan tuned under
     a forced/narrower axis (e.g. ``("pallas",)``) must never be served to
-    a search over a different axis, so the axis is part of the key."""
+    a search over a different axis, so the axis is part of the key.
+
+    ``mesh`` is the distributed shard context (DESIGN.md §7): any JSON-able
+    mapping naming the mesh shape, the mode→axis partitioning, and the
+    shard — e.g. the output of
+    :func:`repro.distributed.spttn_dist.shard_mesh_key`.  ``None`` means
+    single-device.  Because the component is part of the hashed document, a
+    sharded pattern can never be served a single-device winner (or a winner
+    tuned for a different mesh axis), even when the local nnz profile
+    happens to coincide.
+
+    >>> from repro.core import spec as S
+    >>> spec = S.mttkrp(8, 6, 5, 4)
+    >>> levels = {0: 1, 1: 8, 2: 20, 3: 40}
+    >>> single = cache_key(spec, levels, "cpu:x")
+    >>> shard0 = cache_key(spec, levels, "cpu:x",
+    ...                    mesh={"mesh_shape": {"data": 4},
+    ...                          "mode_axis": {"0": "data"}, "shard": 0})
+    >>> single == shard0
+    False
+    >>> len(single)
+    64
+    """
     doc = {
         "version": CACHE_VERSION,
         "spec": spec_signature(spec),
@@ -66,6 +96,7 @@ def cache_key(spec: SpTTNSpec,
                        for k, v in sorted(nnz_levels.items())},
         "device": device if device is not None else device_kind(),
         "backends": list(backends),
+        "mesh": None if mesh is None else dict(mesh),
     }
     blob = json.dumps(doc, sort_keys=True).encode()
     return hashlib.sha256(blob).hexdigest()
@@ -73,7 +104,19 @@ def cache_key(spec: SpTTNSpec,
 
 @dataclasses.dataclass
 class PlanCache:
-    """One JSON file per plan under ``cache_dir``."""
+    """One JSON file per plan under ``cache_dir``.
+
+    >>> import tempfile
+    >>> from repro.core import spec as S
+    >>> from repro.core.planner import plan
+    >>> cache = PlanCache(tempfile.mkdtemp())
+    >>> p = plan(S.mttkrp(8, 6, 5, 4))
+    >>> path = cache.put("some-key", p)
+    >>> cache.get("some-key") == p
+    True
+    >>> cache.get("missing") is None
+    True
+    """
 
     cache_dir: str
 

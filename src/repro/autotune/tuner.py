@@ -34,6 +34,14 @@ class TunerConfig:
     elsewhere — interpret-mode Pallas can never win wall-clock on CPU, so
     measuring it there only slows the search; pass it explicitly to force
     a pallas-backend plan, e.g. ``backends=("pallas",)``).
+
+    ``mesh`` is the distributed shard context for a shard-local search
+    (DESIGN.md §7): a JSON-able mapping naming the mesh shape, the
+    mode→axis partitioning, and the shard (see
+    :func:`repro.distributed.spttn_dist.shard_mesh_key`).  It enters the
+    plan-cache key — a sharded pattern never reuses a single-device
+    winner — and is stamped onto the tuned plan, which persists it in
+    plan JSON v3.
     """
 
     max_paths: int | None = 16
@@ -46,6 +54,7 @@ class TunerConfig:
     synth_density: float = 0.05   # for synthesized measurement tensors
     synth_seed: int = 0
     backends: tuple[str, ...] | None = None
+    mesh: Mapping | None = None
 
 
 def default_backends() -> tuple[str, ...]:
@@ -89,7 +98,19 @@ def tune(spec: SpTTNSpec,
     ``csf``/``factors`` supply measurement inputs; either may be omitted
     and is then synthesized deterministically from the spec.  With
     ``cache_dir`` set, a prior winner for the same (spec, nnz profile,
-    device) is returned without executing any candidate.
+    device, backend axis, mesh context) is returned without executing any
+    candidate.
+
+    >>> from repro.core import spec as S
+    >>> tuned, stats = tune(S.mttkrp(8, 6, 5, 4),
+    ...                     config=TunerConfig(max_paths=2, max_candidates=2,
+    ...                                        orders_per_path=1, repeats=2))
+    >>> stats.cache_hit
+    False
+    >>> stats.candidates_timed >= 1
+    True
+    >>> tuned.backend in ("xla", "pallas")
+    True
     """
     config = config or TunerConfig()
     cost = cost or ConstrainedBlas(bound=2)
@@ -108,7 +129,8 @@ def tune(spec: SpTTNSpec,
 
     backends = config.backends or default_backends()
     cache = PlanCache(cache_dir) if cache_dir else None
-    key = cache_key(spec, levels, device_kind(), backends=backends)
+    key = cache_key(spec, levels, device_kind(), backends=backends,
+                    mesh=config.mesh)
     stats.cache_key = key
     if cache is not None:
         hit = cache.get(key)
@@ -154,7 +176,8 @@ def tune(spec: SpTTNSpec,
                      order=best.candidate.order, cost=best.candidate.cost,
                      flops=best.candidate.flops,
                      depth=path_depth(best.candidate.path),
-                     backend=best.candidate.backend)
+                     backend=best.candidate.backend,
+                     mesh=None if config.mesh is None else dict(config.mesh))
 
     if cache is not None:
         cache.put(key, plan, meta={
@@ -164,6 +187,7 @@ def tune(spec: SpTTNSpec,
             "executions": stats.executions,
             "device": device_kind(),
             "backends": list(backends),
+            "mesh": None if config.mesh is None else dict(config.mesh),
             "timings": [
                 {"seconds": m.seconds, "pruned": m.pruned,
                  "cost": m.candidate.cost, "flops": m.candidate.flops,

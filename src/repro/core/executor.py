@@ -46,10 +46,11 @@ BACKENDS = ("reference", "xla", "pallas")
 # =========================================================================== #
 # Plan serialization (DESIGN.md §4) — plans are pattern-static, so a chosen
 # schedule survives process restarts via the autotuner's disk cache.
-# Version 2 adds the ``backend`` field (any other version is rejected —
-# the forward/backward-compat rule is "re-plan, never guess").
+# Version 2 added the ``backend`` field; version 3 adds the ``mesh``
+# shard-context field (DESIGN.md §7).  Any other version is rejected —
+# the forward/backward-compat rule is "re-plan, never guess".
 # =========================================================================== #
-PLAN_JSON_VERSION = 2
+PLAN_JSON_VERSION = 3
 
 
 def _operand_to_dict(op) -> dict:
@@ -83,6 +84,7 @@ def plan_to_dict(plan) -> dict:
         "flops": plan.flops,
         "depth": plan.depth,
         "backend": plan.backend,
+        "mesh": None if plan.mesh is None else dict(plan.mesh),
     }
 
 
@@ -104,8 +106,12 @@ def plan_from_dict(doc: dict):
     backend = doc.get("backend", "xla")
     if backend not in BACKENDS:
         raise ValueError(f"unknown plan backend {backend!r}")
+    mesh = doc.get("mesh")
+    if mesh is not None and not isinstance(mesh, dict):
+        raise ValueError(f"plan mesh must be an object or null, got {mesh!r}")
     return SpTTNPlan(spec=spec, path=path, order=order, cost=doc["cost"],
-                     flops=doc["flops"], depth=doc["depth"], backend=backend)
+                     flops=doc["flops"], depth=doc["depth"], backend=backend,
+                     mesh=mesh)
 
 
 def _tensor_ref(d):
@@ -618,6 +624,21 @@ def make_executor(spec: SpTTNSpec, path: ContractionPath, order: LoopOrder,
     ``backend`` is one of :data:`BACKENDS`; ``interpret=None`` resolves via
     :func:`default_interpret` (True off-TPU).  Extra kwargs reach the
     Pallas code generator (``block``, ``strategy``).
+
+    >>> import numpy as np
+    >>> from repro.core import spec as S
+    >>> from repro.core.planner import plan
+    >>> from repro.sparse import build_csf, random_sparse
+    >>> spec = S.mttkrp(8, 6, 5, 4)
+    >>> csf = build_csf(random_sparse((8, 6, 5), 0.2, seed=0))
+    >>> rng = np.random.default_rng(0)
+    >>> factors = {"B": rng.standard_normal((6, 4)).astype(np.float32),
+    ...            "C": rng.standard_normal((5, 4)).astype(np.float32)}
+    >>> p = plan(spec, nnz_levels=csf.nnz_levels())
+    >>> ex = make_executor(spec, p.path, p.order, backend="xla")
+    >>> out = ex(CSFArrays.from_csf(csf), factors)
+    >>> out.shape
+    (8, 4)
     """
     if backend == "xla":
         return VectorizedExecutor(spec, path, order)
@@ -634,7 +655,54 @@ def make_executor(spec: SpTTNSpec, path: ContractionPath, order: LoopOrder,
 def execute_plan(plan, csf, factors: Mapping, backend: str | None = None,
                  **kwargs):
     """Run an :class:`~repro.core.planner.SpTTNPlan` end to end, honoring
-    the plan's tuned backend unless overridden."""
+    the plan's tuned backend unless overridden.
+
+    ``csf`` is either a single operand (a :class:`CSFArrays` /
+    :class:`~repro.sparse.csf.CSFTensor`) or a *sharded* operand: a
+    list/tuple of per-shard CSF tensors that partition the nonzeros of one
+    global tensor **in global coordinates** (every shard keeps the full
+    declared ``dims``).  For a dense output each shard's partial output is
+    exact on the rows its nonzeros touch and zero elsewhere, so the global
+    result is the plain sum of the per-shard partials — the host-side
+    mirror of the distributed engine's psum (DESIGN.md §7).  ``factors``
+    may then be one mapping (replicated operands) or a per-shard sequence.
+    Sharded execution of a same-sparsity (TTTP-like) output is rejected:
+    leaf values are per-shard local and need the distributed engine's
+    layout to reassemble.
+
+    >>> import numpy as np
+    >>> from repro.core import spec as S
+    >>> from repro.core.planner import plan
+    >>> from repro.sparse import build_csf, random_sparse
+    >>> spec = S.mttkrp(8, 6, 5, 4)
+    >>> csf = build_csf(random_sparse((8, 6, 5), 0.2, seed=0))
+    >>> rng = np.random.default_rng(0)
+    >>> factors = {"B": rng.standard_normal((6, 4)).astype(np.float32),
+    ...            "C": rng.standard_normal((5, 4)).astype(np.float32)}
+    >>> p = plan(spec, nnz_levels=csf.nnz_levels())
+    >>> out = execute_plan(p, CSFArrays.from_csf(csf), factors)
+    >>> out.shape
+    (8, 4)
+    """
+    if isinstance(csf, (list, tuple)):
+        if plan.spec.output_is_sparse:
+            raise ValueError(
+                "sharded operands with a same-sparsity output need the "
+                "distributed engine (repro.distributed.spttn_dist); "
+                "per-shard leaf values cannot be summed")
+        if not csf:
+            raise ValueError("empty shard list")
+        per_shard = (list(factors) if isinstance(factors, (list, tuple))
+                     else [factors] * len(csf))
+        if len(per_shard) != len(csf):
+            raise ValueError(
+                f"{len(csf)} shards but {len(per_shard)} factor mappings")
+        total = None
+        for shard, f in zip(csf, per_shard):
+            part = jnp.asarray(execute_plan(plan, shard, f,
+                                            backend=backend, **kwargs))
+            total = part if total is None else total + part
+        return total
     ex = make_executor(plan.spec, plan.path, plan.order,
                        backend=backend or plan.backend, **kwargs)
     return ex(csf, factors)

@@ -29,8 +29,12 @@ class SpTTNPlan:
     ``backend`` names the execution engine the schedule was selected for
     (``repro.core.executor.BACKENDS``); the autotuner treats it as a search
     axis, so a persisted plan replays on the engine it actually won on.
-    ``stats`` is attached by autotuned planning (search/cache accounting);
-    it is excluded from equality so a cache round trip compares identical.
+    ``mesh`` records the distributed shard context the plan was tuned
+    under (mesh shape + partitioned axes + shard; ``None`` for a
+    single-device plan) and is persisted in plan JSON v3 — see DESIGN.md
+    §7.  ``stats`` is attached by autotuned planning (search/cache
+    accounting); it is excluded from equality so a cache round trip
+    compares identical.
     """
 
     spec: SpTTNSpec
@@ -40,6 +44,7 @@ class SpTTNPlan:
     flops: float
     depth: int
     backend: str = "xla"
+    mesh: Mapping | None = None
     stats: object | None = dataclasses.field(default=None, compare=False,
                                              repr=False)
 
@@ -74,6 +79,17 @@ def plan(spec: SpTTNSpec,
     (see ``plan.stats``).  ``csf``/``factors`` supply measurement inputs
     and default to deterministic synthetic ones; ``tuner`` is an optional
     :class:`repro.autotune.TunerConfig`.
+
+    >>> from repro.core import spec as S
+    >>> p = plan(S.mttkrp(8, 6, 5, 4))
+    >>> p.depth
+    4
+    >>> p.backend
+    'xla'
+    >>> p.mesh is None       # single-device plan; see DESIGN.md §7
+    True
+    >>> len(p.path)          # two contraction terms: leaf and root
+    2
     """
     if autotune:
         from repro.autotune import TunerConfig, tune

@@ -43,6 +43,18 @@ class SpTTNSpec:
     network, which we also support for completeness).  The output either has
     no sparse-only indices (dense output) or exactly the sparse tensor's
     index set (same-sparsity output, e.g. TTTP).
+
+    Build one with :func:`parse` or the named constructors below:
+
+    >>> spec = mttkrp(8, 6, 5, 4)         # "ijk,ja,ka->ia", input 0 sparse
+    >>> spec.sparse_indices               # CSF storage order
+    ('i', 'j', 'k')
+    >>> spec.contracted_indices
+    ('j', 'k')
+    >>> spec.output_is_sparse
+    False
+    >>> spec.size("a")
+    4
     """
 
     inputs: tuple[TensorRef, ...]
@@ -113,6 +125,14 @@ def parse(expr: str,
     """Parse ``"ijk,ja,ka->ia"`` into an :class:`SpTTNSpec`.
 
     ``sparse`` is the position of the sparse input (None = all dense).
+
+    >>> spec = parse("ijk,ja,ka->ia",
+    ...              dims={"i": 8, "j": 6, "k": 5, "a": 4},
+    ...              names=["T", "B", "C"])
+    >>> str(spec)
+    'T*(i,j,k),B(j,a),C(k,a)->OUT(i,a)'
+    >>> spec.sparse_input.name
+    'T'
     """
     if "->" not in expr:
         raise ValueError("explicit output required, e.g. 'ijk,ja->ia'")

@@ -1,3 +1,12 @@
 from repro.distributed import collectives, sharding, spttn_dist
+from repro.distributed.spttn_dist import (DistributedPlanReplay,
+                                          make_distributed,
+                                          make_distributed_tuned,
+                                          partition_nonzeros,
+                                          shard_mesh_key)
 
-__all__ = ["collectives", "sharding", "spttn_dist"]
+__all__ = [
+    "collectives", "sharding", "spttn_dist", "DistributedPlanReplay",
+    "make_distributed", "make_distributed_tuned", "partition_nonzeros",
+    "shard_mesh_key",
+]

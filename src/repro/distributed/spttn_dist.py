@@ -14,6 +14,18 @@ CTF layout, TPU-native:
 
 Local CSFs are padded to common sizes so one jaxpr serves all shards; all
 padding is provably zero-contributing (zero values / fiber-0 segments).
+
+Two entry points (DESIGN.md §7, docs/distributed.md):
+
+* :func:`make_distributed` — the collective engine: one plan, one
+  shard_map jaxpr, psum over contracted partitioned modes.
+* :func:`make_distributed_tuned` — distributed *plan replay*: the
+  autotuner runs (or cache-hits) per shard on each shard's local nnz
+  profile, and every shard executes through ``execute_plan`` with its
+  winner's backend.  Homogeneous XLA winners route back through the
+  collective engine; anything else replays shard-by-shard with a
+  host-side sum of partials (exact, since shards keep global
+  coordinates and partition the nonzeros).
 """
 from __future__ import annotations
 
@@ -227,6 +239,233 @@ def make_distributed(spec: SpTTNSpec, plan: SpTTNPlan, coo: COOTensor,
     return dist
 
 
+# =========================================================================== #
+# Distributed plan replay (DESIGN.md §7): per-shard tuned backends
+# =========================================================================== #
+def shard_mesh_key(mesh, mode_axis: Mapping[int, str],
+                   shard: int) -> dict:
+    """JSON-able shard context for the plan cache key (DESIGN.md §7).
+
+    Names everything that distinguishes one shard-local tuning problem
+    from the single-device one and from other mesh layouts: the sizes of
+    the partitioned mesh axes, the mode→axis assignment, and the shard
+    index.  Feed it to ``TunerConfig.mesh`` /
+    :func:`repro.autotune.cache_key`; it is also stamped onto the tuned
+    plan and persisted in plan JSON v3.
+
+    ``mesh`` is a :class:`jax.sharding.Mesh` or a plain ``{axis: size}``
+    mapping (handy for key computations without building devices).
+
+    >>> shard_mesh_key({"data": 4}, {0: "data"}, shard=2)
+    {'mesh_shape': {'data': 4}, 'mode_axis': {'0': 'data'}, 'shard': 2}
+    """
+    shape = mesh.shape if hasattr(mesh, "shape") else mesh
+    return {
+        "mesh_shape": {ax: int(shape[ax])
+                       for ax in sorted(set(mode_axis.values()))},
+        "mode_axis": {str(m): ax for m, ax in sorted(mode_axis.items())},
+        "shard": int(shard),
+    }
+
+
+def partition_nonzeros(coo: COOTensor, nparts: Mapping[int, int],
+                       cyclic: bool = True) -> list[COOTensor]:
+    """Partition ``coo``'s nonzeros by (cyclic) ownership over the
+    partitioned modes, **keeping global coordinates** — each shard is a
+    same-shape COO holding a disjoint nonzero subset, so per-shard dense
+    partial outputs sum exactly to the global output (the replay-mode
+    reduction; contrast :func:`make_distributed`, which relabels
+    coordinates for the equal-block shard_map layout).
+
+    ``nparts`` maps mode → number of parts; ownership composes over modes
+    in sorted order (mixed radix, same shard enumeration as
+    :func:`make_distributed`'s owner computation for one-mode grids).
+    """
+    owner = np.zeros(coo.nnz, np.int64)
+    nshards = 1
+    for m in sorted(nparts):
+        P_m = int(nparts[m])
+        if cyclic:
+            part = coo.coords[:, m] % P_m
+        else:
+            local_dim = -(-coo.shape[m] // P_m)
+            part = coo.coords[:, m] // local_dim
+        owner = owner * P_m + part
+        nshards *= P_m
+    out = []
+    for s in range(nshards):
+        idx = np.flatnonzero(owner == s)
+        # a subset of lexicographically sorted rows stays sorted
+        out.append(COOTensor(coords=np.ascontiguousarray(coo.coords[idx]),
+                             values=np.ascontiguousarray(coo.values[idx]),
+                             shape=coo.shape))
+    return out
+
+
+@dataclasses.dataclass
+class TunedShard:
+    """One shard of a :class:`DistributedPlanReplay`: the shard-locally
+    tuned plan, the search stats (cache hit/miss accounting), and the
+    compiled executor closure.  Only the operand representation the
+    shard's backend executes is retained — ``csf`` (host CSFTensor,
+    global coordinates) for ``reference`` replay, ``arrays`` for
+    ``xla``/``pallas`` replay, neither in collective mode (the shard_map
+    engine builds its own stacked layout)."""
+
+    index: int
+    nnz: int
+    plan: SpTTNPlan | None       # None for an empty shard
+    stats: object | None         # autotune SearchStats
+    csf: object | None = None
+    arrays: CSFArrays | None = None
+    fn: object | None = None     # factors -> partial output
+
+
+@dataclasses.dataclass
+class DistributedPlanReplay:
+    """Distributed SpTTN execution with per-shard tuned plans.
+
+    ``mode`` is ``"collective"`` when every shard's winner agreed on one
+    XLA schedule — execution then goes through the shard_map engine
+    (:func:`make_distributed`), psum included; otherwise ``"replay"``:
+    each shard executes its own tuned plan via its compiled backend
+    (``reference``/``xla``/``pallas``) and the dense partials are summed
+    host-side (exact, because shards keep global coordinates).  Calling
+    the object always returns the **global** dense output, so results are
+    directly comparable against ``reference_execute``/``dense_oracle``.
+    """
+
+    spec: SpTTNSpec
+    mesh: Mesh
+    mode_axis: dict[int, str]
+    shape: tuple[int, ...]       # global sparse-tensor shape
+    shards: list[TunedShard]
+    mode: str
+    cyclic: bool = True
+    collective: DistributedSpTTN | None = None
+    # pattern-static undo-relabeling gathers, built lazily once
+    _undo: list | None = dataclasses.field(default=None, repr=False,
+                                           compare=False)
+
+    @property
+    def plans(self) -> list[SpTTNPlan | None]:
+        return [sh.plan for sh in self.shards]
+
+    @property
+    def backends(self) -> list[str | None]:
+        return [None if sh.plan is None else sh.plan.backend
+                for sh in self.shards]
+
+    @property
+    def nnz_per_shard(self) -> list[int]:
+        return [sh.nnz for sh in self.shards]
+
+    def __call__(self, factors: Mapping) -> np.ndarray:
+        if self.mode == "collective":
+            out = np.asarray(self.collective(factors))
+            if self._undo is None:
+                self._undo = undo_cyclic_plan(self.spec, self.mode_axis,
+                                              self.mesh, self.shape,
+                                              cyclic=self.cyclic)
+            for axis, take in self._undo:
+                out = np.take(out, take, axis=axis)
+            return out
+        total = None
+        for sh in self.shards:
+            if sh.fn is None:
+                continue
+            part = np.asarray(sh.fn(factors))
+            total = part if total is None else total + part
+        if total is None:       # all shards empty: zero output
+            dims = self.spec.dims
+            total = np.zeros([dims[i] for i in self.spec.output.indices],
+                             np.float32)
+        return total
+
+
+def make_distributed_tuned(spec: SpTTNSpec, coo: COOTensor, mesh: Mesh,
+                           mode_axis: Mapping[int, str],
+                           cache_dir: str | None = None,
+                           tuner=None, cyclic: bool = True,
+                           prefer_collective: bool = True,
+                           **executor_kwargs) -> DistributedPlanReplay:
+    """Partition ``coo`` over the mesh and replay a tuned plan per shard.
+
+    The end-to-end pipeline of DESIGN.md §7: partition the nonzeros over
+    the partitioned mesh axes → per shard, run (or cache-hit) the
+    autotuner on the *shard's local nnz profile* under a mesh-extended
+    cache key (:func:`shard_mesh_key` via ``TunerConfig.mesh``) → execute
+    every shard through its winner's backend → reduce the partial
+    outputs.  When all shards agree on one XLA schedule (the common case
+    for well-balanced partitions) and ``prefer_collective`` is set, the
+    reduction is the collective engine's psum (:func:`make_distributed`);
+    heterogeneous or non-XLA winners replay shard-by-shard with a
+    host-side sum.
+
+    ``tuner`` is a :class:`repro.autotune.TunerConfig` template (its
+    ``mesh`` field is overwritten per shard); extra kwargs reach the
+    Pallas code generator for pallas-backend shards (``block``,
+    ``strategy``).  Same-sparsity (TTTP-like) outputs need the collective
+    layout to reassemble leaf values and are rejected here — use
+    :func:`make_distributed`.
+    """
+    if spec.output_is_sparse:
+        raise ValueError(
+            "make_distributed_tuned requires a dense output; same-sparsity "
+            "outputs (TTTP-like) reassemble leaf values through "
+            "make_distributed's stacked layout instead")
+    from repro.autotune import TunerConfig, tune
+    from repro.core.executor import make_executor
+
+    base = tuner if tuner is not None else TunerConfig()
+    nparts = {m: int(mesh.shape[ax]) for m, ax in mode_axis.items()}
+    shards: list[TunedShard] = []
+    for s, local in enumerate(partition_nonzeros(coo, nparts,
+                                                 cyclic=cyclic)):
+        if local.nnz == 0:
+            shards.append(TunedShard(s, 0, None, None))
+            continue
+        csf_s = build_csf(local)
+        cfg = dataclasses.replace(
+            base, mesh=shard_mesh_key(mesh, mode_axis, s))
+        plan_s, stats_s = tune(spec, csf=csf_s, cache_dir=cache_dir,
+                               config=cfg)
+        shards.append(TunedShard(s, csf_s.nnz, plan_s, stats_s, csf=csf_s))
+
+    live = [sh for sh in shards if sh.plan is not None]
+    dist = DistributedPlanReplay(spec=spec, mesh=mesh,
+                                 mode_axis=dict(mode_axis), shape=coo.shape,
+                                 shards=shards, mode="replay", cyclic=cyclic)
+    if not live:
+        return dist              # degenerate: empty tensor, zero output
+
+    first = live[0].plan
+    homogeneous = all(
+        (sh.plan.path, sh.plan.order, sh.plan.backend)
+        == (first.path, first.order, first.backend) for sh in live)
+    if prefer_collective and homogeneous and first.backend == "xla":
+        dist.mode = "collective"
+        dist.collective = make_distributed(spec, first, coo, mesh,
+                                           dict(mode_axis), cyclic=cyclic)
+        for sh in live:          # shard_map holds its own stacked layout
+            sh.csf = None
+        return dist
+
+    for sh in live:
+        kw = executor_kwargs if sh.plan.backend == "pallas" else {}
+        ex = make_executor(spec, sh.plan.path, sh.plan.order,
+                           backend=sh.plan.backend, **kw)
+        if sh.plan.backend == "reference":
+            sh.fn = (lambda f, ex=ex, csf=sh.csf: ex(csf, f))
+        else:
+            sh.arrays = CSFArrays.from_csf(sh.csf)
+            sh.arrays.host = None    # device arrays suffice for xla/pallas
+            sh.csf = None
+            sh.fn = jax.jit(lambda f, ex=ex, arrays=sh.arrays:
+                            ex(arrays, f))
+    return dist
+
+
 def gather_sparse_values(dist: DistributedSpTTN, out_stacked) -> np.ndarray:
     """Reassemble a same-sparsity (TTTP-like) output into the original COO
     nonzero order from the stacked per-shard value layout."""
@@ -241,11 +480,14 @@ def gather_sparse_values(dist: DistributedSpTTN, out_stacked) -> np.ndarray:
     return out
 
 
-def undo_cyclic(out: np.ndarray, spec: SpTTNSpec, mode_axis, mesh,
-                shape, cyclic: bool = True) -> np.ndarray:
-    """Invert the cyclic row relabeling on output modes for comparison."""
+def undo_cyclic_plan(spec: SpTTNSpec, mode_axis, mesh, shape,
+                     cyclic: bool = True) -> list[tuple[int, np.ndarray]]:
+    """Pattern-static (axis, take) gathers inverting the cyclic row
+    relabeling on partitioned output modes — compute once, apply per
+    call (the stacked layout is [part, local]; global = local*nparts +
+    part)."""
     sp_inds = spec.sparse_indices
-    res = out
+    plan = []
     for m, ax in mode_axis.items():
         ind = sp_inds[m]
         if ind not in spec.output.indices:
@@ -255,20 +497,23 @@ def undo_cyclic(out: np.ndarray, spec: SpTTNSpec, mode_axis, mesh,
         I = shape[m]
         local = -(-I // nparts)
         if not cyclic:
-            res = np.take(res, np.arange(I), axis=axis)
+            plan.append((axis, np.arange(I)))
             continue
-        # stacked layout: [part, local] -> global = local*nparts + part
-        idx = np.zeros(nparts * local, np.int64)
-        for p in range(nparts):
-            for l in range(local):
-                g = l * nparts + p
-                if g < I:
-                    idx[p * local + l] = g
         take = np.zeros(I, np.int64)
         for p in range(nparts):
             for l in range(local):
                 g = l * nparts + p
                 if g < I:
                     take[g] = p * local + l
+        plan.append((axis, take))
+    return plan
+
+
+def undo_cyclic(out: np.ndarray, spec: SpTTNSpec, mode_axis, mesh,
+                shape, cyclic: bool = True) -> np.ndarray:
+    """Invert the cyclic row relabeling on output modes for comparison."""
+    res = out
+    for axis, take in undo_cyclic_plan(spec, mode_axis, mesh, shape,
+                                       cyclic=cyclic):
         res = np.take(res, take, axis=axis)
     return res

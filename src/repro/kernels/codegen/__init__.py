@@ -5,12 +5,15 @@ path + loop order + CSF level profile — to fused Pallas kernels.  This
 is the ``backend="pallas"`` engine behind
 :func:`repro.core.executor.make_executor`.
 """
-from repro.kernels.codegen.executor import DEFAULT_BLOCK, PallasPlanExecutor
+from repro.kernels.codegen.executor import (DEFAULT_BLOCK,
+                                            PallasPlanExecutor,
+                                            SegmentProfile, segment_profile)
 from repro.kernels.codegen.stages import (Stage, StageOperand,
                                           run_product_stage,
                                           run_reduce_stage)
 
 __all__ = [
-    "DEFAULT_BLOCK", "PallasPlanExecutor", "Stage", "StageOperand",
+    "DEFAULT_BLOCK", "PallasPlanExecutor", "SegmentProfile",
+    "segment_profile", "Stage", "StageOperand",
     "run_product_stage", "run_reduce_stage",
 ]

@@ -25,6 +25,8 @@ a special case (it survives as the generator's regression fixture).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 import jax
@@ -41,6 +43,53 @@ from repro.kernels.codegen.stages import (Stage, StageOperand,
 from repro.kernels.util import padded_segment_layout, round_up
 
 DEFAULT_BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentProfile:
+    """Static reduction profile of one (lvl → out_lvl) CSF segment map.
+
+    This is everything the strategy choice reads about the pattern, and it
+    is computed from the *operand actually being executed* — in the
+    distributed engine that is a shard's local CSF, so each shard picks
+    its lowering from its own nonzero distribution (a skewed shard may
+    take ``row`` while a sparse one takes ``segsum``; DESIGN.md §7).
+    """
+
+    lvl: int
+    out_lvl: int
+    nfib: int            # level-``lvl`` fibers entering the reduction
+    nseg: int            # level-``out_lvl`` output rows
+    max_seg: int         # longest segment (fibers feeding one output row)
+    mean_seg: float      # nfib / nseg
+
+    @staticmethod
+    def row_decision(nfib: int, nseg: int, block: int) -> bool:
+        """The strategy formula on the O(1) fiber counts alone: row wins
+        when block-per-segment padding stays within ~4x of the fiber
+        count (small kernels always qualify via the absolute floor)."""
+        return nseg * block <= max(4 * nfib, 4 * block)
+
+    def prefers_row(self, block: int) -> bool:
+        """True when the fused VMEM row accumulator is the better
+        lowering for this profile; otherwise fall back to ``segsum``."""
+        return self.row_decision(self.nfib, self.nseg, block)
+
+
+def segment_profile(csf: CSFArrays, lvl: int, out_lvl: int) -> SegmentProfile:
+    """Profile the ``(lvl, out_lvl)`` segment map of ``csf`` (pattern-
+    static; concrete per operand, hence per shard).  ``max_seg`` and
+    ``mean_seg`` cost one O(nfib) pass — inspection/reporting callers
+    only; the trace-time strategy choice reads just the O(1) counts."""
+    nfib = csf.nfib[lvl]
+    nseg = csf.nfib[out_lvl] if out_lvl > 0 else 1
+    if nfib == 0:
+        return SegmentProfile(lvl, out_lvl, 0, nseg, 0, 0.0)
+    seg = np.asarray(csf.seg[(lvl, out_lvl)]) if out_lvl > 0 else \
+        np.zeros(nfib, np.int64)
+    counts = np.bincount(seg, minlength=max(nseg, 1))
+    return SegmentProfile(lvl, out_lvl, nfib, nseg, int(counts.max()),
+                          nfib / max(nseg, 1))
 
 
 class PallasPlanExecutor(VectorizedExecutor):
@@ -61,6 +110,9 @@ class PallasPlanExecutor(VectorizedExecutor):
         self.interpret = default_interpret() if interpret is None \
             else interpret
         self.strategy = strategy
+        # (lvl, out_lvl) -> "row" | "segsum", recorded at trace time for
+        # inspection (tests, distributed per-shard strategy reporting)
+        self.stage_strategy: dict[tuple[int, int], str] = {}
 
     # -- static layouts (pattern-fixed, cached on the CSFArrays) -------- #
     def _layout(self, csf: CSFArrays, lvl: int, out_lvl: int):
@@ -76,14 +128,23 @@ class PallasPlanExecutor(VectorizedExecutor):
                           jnp.asarray(lay.block_first))
         return cache[key]
 
-    def _use_row(self, csf: CSFArrays, lvl: int, out_lvl: int) -> bool:
+    def strategy_for(self, csf: CSFArrays, lvl: int, out_lvl: int) -> str:
+        """Reduction lowering for this operand's (lvl, out_lvl) stage,
+        chosen from its segment profile (per-shard in the distributed
+        engine) unless forced by ``strategy``.  Reads only the O(1)
+        fiber counts — :func:`segment_profile` exists for callers that
+        want the full distribution."""
         if self.strategy != "auto":
-            return self.strategy == "row"
-        nseg = csf.nfib[out_lvl] if out_lvl > 0 else 1
+            return self.strategy
         nfib = csf.nfib[lvl]
-        # block-per-segment padding must stay within ~4x of the fiber
-        # count (small kernels always qualify via the absolute floor)
-        return nseg * self.block <= max(4 * nfib, 4 * self.block)
+        nseg = csf.nfib[out_lvl] if out_lvl > 0 else 1
+        row = SegmentProfile.row_decision(nfib, nseg, self.block)
+        return "row" if row else "segsum"
+
+    def _use_row(self, csf: CSFArrays, lvl: int, out_lvl: int) -> bool:
+        choice = self.strategy_for(csf, lvl, out_lvl)
+        self.stage_strategy[(lvl, out_lvl)] = choice
+        return choice == "row"
 
     # -- the lowering unit ---------------------------------------------- #
     def _fiber_contract(self, csf: CSFArrays, fa, da, fb, db,

@@ -153,7 +153,7 @@ def test_handwritten_mttkrp_is_a_regression_fixture():
 
 
 # --------------------------------------------------------------------- #
-# backend registry + plan JSON v2
+# backend registry + plan JSON v3
 # --------------------------------------------------------------------- #
 def test_make_executor_backends_share_semantics():
     spec = S.ttmc3(6, 7, 8, 4, 3)
@@ -174,14 +174,15 @@ def test_make_executor_backends_share_semantics():
         make_executor(spec, p.path, p.order, backend="triton")
 
 
-def test_plan_json_v2_round_trip_with_backend():
+def test_plan_json_v3_round_trip_with_backend():
     spec = S.mttkrp(8, 6, 5, 3)
     p = plan(spec)
     import dataclasses
     tagged = dataclasses.replace(p, backend="pallas")
     doc = plan_to_dict(tagged)
-    assert doc["version"] == PLAN_JSON_VERSION == 2
+    assert doc["version"] == PLAN_JSON_VERSION == 3
     assert doc["backend"] == "pallas"
+    assert doc["mesh"] is None            # single-device plan
     rt = plan_from_json(plan_to_json(tagged))
     assert rt == tagged and rt.backend == "pallas"
     # a plan serialized without an explicit backend defaults to xla
@@ -190,7 +191,7 @@ def test_plan_json_v2_round_trip_with_backend():
     assert plan_from_dict(doc2).backend == "xla"
 
 
-@pytest.mark.parametrize("version", [1, 3, None, "2"])
+@pytest.mark.parametrize("version", [1, 2, None, "3"])
 def test_plan_json_rejects_foreign_versions(version):
     """Forward/backward compat is re-plan-never-guess: any version other
     than the current one is rejected outright."""
@@ -306,6 +307,6 @@ def test_cached_plan_meta_records_backends(tmp_path):
     assert len(files) == 1
     with open(tmp_path / files[0]) as f:
         doc = json.load(f)
-    assert doc["plan"]["version"] == 2
+    assert doc["plan"]["version"] == 3
     assert set(doc["meta"]["backends"]) == {"xla", "pallas"}
     assert all("backend" in t for t in doc["meta"]["timings"])

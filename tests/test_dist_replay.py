@@ -1,0 +1,266 @@
+"""Distributed plan replay (DESIGN.md §7, docs/distributed.md).
+
+Covers: (a) sharded execution through per-shard tuned backends matches the
+single-device Algorithm-2 reference to 1e-5 on MTTKRP and TTMc, with each
+shard's plan landing in (and replaying from) the mesh-keyed plan cache;
+(b) the cache key's mesh component — a sharded pattern never reuses a
+single-device winner, and changing the mesh axis is a miss; (c) plan JSON
+v3 round-trips the mesh/shard fields and rejects v2; (d) ``execute_plan``
+over sharded operands sums per-shard partials exactly; (e) the codegen
+strategy choice consumes per-shard segment profiles.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.autotune import TunerConfig, cache_key, tune
+from repro.core import spec as S
+from repro.core.executor import (CSFArrays, dense_oracle, execute_plan,
+                                 plan_from_dict, plan_from_json,
+                                 plan_to_dict, plan_to_json)
+from repro.core.planner import plan
+from repro.distributed import partition_nonzeros, shard_mesh_key
+from repro.kernels.codegen import PallasPlanExecutor, segment_profile
+from repro.sparse import build_csf, random_sparse
+from tests.conftest import run_with_devices
+
+FAST = TunerConfig(max_paths=2, max_candidates=2, orders_per_path=1,
+                   warmup=1, repeats=2)
+
+
+# --------------------------------------------------------------------- #
+# (a) sharded-vs-single-device parity + per-shard cached tuned backends
+# --------------------------------------------------------------------- #
+def test_distributed_replay_parity_and_per_shard_cache(tmp_path):
+    code = f"""
+import json, os
+import numpy as np, jax, jax.numpy as jnp
+from repro.autotune import TunerConfig
+from repro.core import spec as S
+from repro.core.executor import reference_execute
+from repro.core.planner import plan
+from repro.distributed import make_distributed_tuned
+from repro.sparse import build_csf, random_sparse
+
+cache_dir = {str(tmp_path)!r}
+mesh = jax.make_mesh((4,), ("data",))
+cfg = TunerConfig(max_paths=2, max_candidates=2, orders_per_path=1,
+                  warmup=1, repeats=2)
+rng = np.random.default_rng(0)
+
+for name, spec, shape in [
+        ("mttkrp", S.mttkrp(16, 12, 10, 8), (16, 12, 10)),
+        ("ttmc", S.ttmc3(16, 12, 10, 6, 5), (16, 12, 10))]:
+    T = random_sparse(shape, 0.1, seed=2)
+    csf = build_csf(T)
+    factors = {{t.name: jnp.asarray(rng.standard_normal(
+        [spec.dims[i] for i in t.indices]).astype(np.float32))
+        for t in spec.inputs if not t.is_sparse}}
+    d = os.path.join(cache_dir, name)
+    dist = make_distributed_tuned(spec, T, mesh, {{0: "data"}},
+                                  cache_dir=d, tuner=cfg)
+    out = dist(factors)
+    single = plan(spec, nnz_levels=csf.nnz_levels())
+    ref = reference_execute(spec, single.path, single.order, csf,
+                            {{k: np.asarray(v) for k, v in factors.items()}})
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    # every live shard tuned (cold) and its winner went to the cache
+    live = [sh for sh in dist.shards if sh.plan is not None]
+    assert live and all(not sh.stats.cache_hit for sh in live)
+    # cache inspection: one mesh-keyed entry per shard, each carrying the
+    # shard context and the tuned backend in plan JSON v3
+    entries = sorted(os.listdir(d))
+    assert len(entries) == len(live), (entries, len(live))
+    shards_seen, backends_seen = set(), set()
+    for fname in entries:
+        with open(os.path.join(d, fname)) as f:
+            doc = json.load(f)
+        assert doc["plan"]["version"] == 3
+        m = doc["plan"]["mesh"]
+        assert m["mesh_shape"] == {{"data": 4}}
+        assert m["mode_axis"] == {{"0": "data"}}
+        shards_seen.add(m["shard"])
+        backends_seen.add(doc["plan"]["backend"])
+    assert shards_seen == {{sh.index for sh in live}}
+
+    # replay from cache: zero executions, same plans, same output
+    dist2 = make_distributed_tuned(spec, T, mesh, {{0: "data"}},
+                                   cache_dir=d, tuner=cfg)
+    live2 = [sh for sh in dist2.shards if sh.plan is not None]
+    assert all(sh.stats.cache_hit and sh.stats.executions == 0
+               for sh in live2)
+    assert [sh.plan for sh in live2] == [sh.plan for sh in live]
+    # each shard executes through its cached tuned backend
+    assert {{sh.plan.backend for sh in live2}} == backends_seen
+    np.testing.assert_allclose(dist2(factors), ref, atol=1e-5)
+    print(name.upper() + "-REPLAY-OK", dist.mode)
+
+# forced-pallas axis: heterogeneous-from-collective path — every shard
+# replays through the generated-kernel backend, same answer
+spec = S.mttkrp(16, 12, 10, 8)
+T = random_sparse((16, 12, 10), 0.1, seed=2)
+csf = build_csf(T)
+factors = {{t.name: jnp.asarray(rng.standard_normal(
+    [spec.dims[i] for i in t.indices]).astype(np.float32))
+    for t in spec.inputs if not t.is_sparse}}
+forced = TunerConfig(max_paths=2, max_candidates=1, orders_per_path=1,
+                     warmup=1, repeats=2, backends=("pallas",))
+distp = make_distributed_tuned(spec, T, mesh, {{0: "data"}}, tuner=forced,
+                               block=8)
+assert distp.mode == "replay"
+assert all(b == "pallas" for b in distp.backends if b is not None)
+single = plan(spec, nnz_levels=csf.nnz_levels())
+ref = reference_execute(spec, single.path, single.order, csf,
+                        {{k: np.asarray(v) for k, v in factors.items()}})
+np.testing.assert_allclose(distp(factors), ref, atol=1e-5)
+print("PALLAS-REPLAY-OK")
+"""
+    out = run_with_devices(code, 8)
+    assert "MTTKRP-REPLAY-OK" in out
+    assert "TTMC-REPLAY-OK" in out
+    assert "PALLAS-REPLAY-OK" in out
+
+
+# --------------------------------------------------------------------- #
+# (b) mesh component of the cache key
+# --------------------------------------------------------------------- #
+def test_mesh_component_changes_cache_key():
+    spec = S.mttkrp(16, 12, 10, 8)
+    levels = {0: 1, 1: 14, 2: 80, 3: 190}
+    single = cache_key(spec, levels, "cpu:x")
+    k_data = cache_key(spec, levels, "cpu:x",
+                       mesh=shard_mesh_key({"data": 4}, {0: "data"}, 0))
+    k_model = cache_key(spec, levels, "cpu:x",
+                        mesh=shard_mesh_key({"model": 4}, {0: "model"}, 0))
+    k_mode1 = cache_key(spec, levels, "cpu:x",
+                        mesh=shard_mesh_key({"data": 4}, {1: "data"}, 0))
+    k_shard1 = cache_key(spec, levels, "cpu:x",
+                         mesh=shard_mesh_key({"data": 4}, {0: "data"}, 1))
+    k_wider = cache_key(spec, levels, "cpu:x",
+                        mesh=shard_mesh_key({"data": 8}, {0: "data"}, 0))
+    keys = {single, k_data, k_model, k_mode1, k_shard1, k_wider}
+    assert len(keys) == 6      # all pairwise distinct
+
+
+def test_sharded_search_misses_single_device_entry(tmp_path):
+    """The same local nnz profile under a mesh context must not be served
+    the single-device winner, and a mesh-axis change is a fresh search."""
+    spec = S.mttkrp(16, 12, 10, 4)
+    csf = build_csf(random_sparse((16, 12, 10), 0.1, seed=3))
+    p0, s0 = tune(spec, csf=csf, cache_dir=str(tmp_path), config=FAST)
+    assert not s0.cache_hit and p0.mesh is None
+
+    sharded = dataclasses.replace(
+        FAST, mesh=shard_mesh_key({"data": 2}, {0: "data"}, 0))
+    p1, s1 = tune(spec, csf=csf, cache_dir=str(tmp_path), config=sharded)
+    assert not s1.cache_hit                 # never reuses the 1-device plan
+    assert s1.cache_key != s0.cache_key
+    assert p1.mesh == sharded.mesh          # plan carries the shard context
+
+    p2, s2 = tune(spec, csf=csf, cache_dir=str(tmp_path), config=sharded)
+    assert s2.cache_hit and s2.executions == 0 and p2 == p1
+
+    moved = dataclasses.replace(
+        FAST, mesh=shard_mesh_key({"model": 2}, {0: "model"}, 0))
+    p3, s3 = tune(spec, csf=csf, cache_dir=str(tmp_path), config=moved)
+    assert not s3.cache_hit                 # mesh axis changed -> miss
+    assert s3.cache_key != s1.cache_key
+
+
+# --------------------------------------------------------------------- #
+# (c) plan JSON v3: mesh fields round-trip, v2 rejected
+# --------------------------------------------------------------------- #
+def test_plan_json_v3_mesh_round_trip():
+    p = plan(S.mttkrp(8, 6, 5, 3))
+    tagged = dataclasses.replace(
+        p, mesh=shard_mesh_key({"data": 4}, {0: "data"}, 2))
+    doc = plan_to_dict(tagged)
+    assert doc["version"] == 3
+    assert doc["mesh"]["shard"] == 2
+    rt = plan_from_json(plan_to_json(tagged))
+    assert rt == tagged and rt.mesh == tagged.mesh
+    assert plan_from_json(plan_to_json(p)).mesh is None
+
+
+def test_plan_json_rejects_v2_and_bad_mesh():
+    doc = plan_to_dict(plan(S.mttkrp(8, 6, 5, 3)))
+    doc2 = dict(doc, version=2)
+    with pytest.raises(ValueError, match="unsupported plan version"):
+        plan_from_dict(doc2)
+    doc3 = dict(doc, mesh="data:4")
+    with pytest.raises(ValueError, match="plan mesh"):
+        plan_from_dict(doc3)
+
+
+# --------------------------------------------------------------------- #
+# (d) execute_plan over sharded operands
+# --------------------------------------------------------------------- #
+def _mttkrp_case():
+    spec = S.mttkrp(16, 12, 10, 8)
+    coo = random_sparse((16, 12, 10), 0.1, seed=2)
+    csf = build_csf(coo)
+    rng = np.random.default_rng(0)
+    factors = {"B": rng.standard_normal((12, 8)).astype(np.float32),
+               "C": rng.standard_normal((10, 8)).astype(np.float32)}
+    return spec, coo, csf, factors
+
+
+def test_execute_plan_sharded_operands_sum_exactly():
+    spec, coo, csf, factors = _mttkrp_case()
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    parts = partition_nonzeros(coo, {0: 4})
+    assert sum(c.nnz for c in parts) == coo.nnz
+    assert all(c.shape == coo.shape for c in parts)   # global coordinates
+    shards = [CSFArrays.from_csf(build_csf(c)) for c in parts if c.nnz]
+    out = np.asarray(execute_plan(p, shards, factors))
+    oracle = dense_oracle(spec, csf, factors)
+    np.testing.assert_allclose(out, oracle, atol=1e-5)
+    # per-shard factor list of the wrong length is rejected
+    with pytest.raises(ValueError, match="factor mappings"):
+        execute_plan(p, shards, [factors] * (len(shards) + 1))
+
+
+def test_execute_plan_sharded_rejects_sparse_output():
+    spec = S.tttp3(8, 6, 5, 4)
+    coo = random_sparse((8, 6, 5), 0.2, seed=1)
+    p = plan(spec)
+    shards = [CSFArrays.from_csf(build_csf(c))
+              for c in partition_nonzeros(coo, {0: 2}) if c.nnz]
+    rng = np.random.default_rng(0)
+    factors = {t.name: rng.standard_normal(
+        [spec.dims[i] for i in t.indices]).astype(np.float32)
+        for t in spec.inputs if not t.is_sparse}
+    with pytest.raises(ValueError, match="same-sparsity"):
+        execute_plan(p, shards, factors)
+
+
+# --------------------------------------------------------------------- #
+# (e) per-shard segment profiles feed the codegen strategy choice
+# --------------------------------------------------------------------- #
+def test_strategy_consumes_per_shard_segment_profile():
+    spec, coo, csf, _ = _mttkrp_case()
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8, interpret=True)
+    shard_arrays = [CSFArrays.from_csf(build_csf(c))
+                    for c in partition_nonzeros(coo, {0: 4}) if c.nnz]
+    for arrays in shard_arrays:
+        for lvl, out_lvl in [(3, 1), (2, 1), (3, 2)]:
+            prof = segment_profile(arrays, lvl, out_lvl)
+            assert prof.nfib == arrays.nfib[lvl]
+            assert prof.nseg == arrays.nfib[out_lvl]
+            assert prof.max_seg >= 1 and prof.mean_seg > 0
+            want = "row" if prof.prefers_row(ex.block) else "segsum"
+            assert ex.strategy_for(arrays, lvl, out_lvl) == want
+    # profiles are genuinely per shard: fiber counts differ across shards
+    assert len({a.nfib[3] for a in shard_arrays}) > 1
+    # and executing records the trace-time choice for inspection
+    rng = np.random.default_rng(0)
+    factors = {"B": rng.standard_normal((12, 8)).astype(np.float32),
+               "C": rng.standard_normal((10, 8)).astype(np.float32)}
+    ex(shard_arrays[0], factors)
+    assert ex.stage_strategy and set(ex.stage_strategy.values()) <= {
+        "row", "segsum"}
