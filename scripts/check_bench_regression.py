@@ -2,7 +2,8 @@
 """Benchmark regression gate for the CI bench-smoke lane.
 
 Compares a freshly measured medians file (benchmarks/run.py with
-BENCH_JSON=...) against the committed baseline (BENCH_pr2.json) and
+BENCH_JSON=...) against the committed baseline (BENCH_pr4.json, which
+added the fused-vs-staged MTTKRP pallas rows as gated entries) and
 fails when any shared row slowed down by more than ``--threshold``
 (default 3x — generous on purpose: CI runners are shared machines, and
 the gate's job is to catch order-of-magnitude schedule regressions, not

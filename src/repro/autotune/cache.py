@@ -38,9 +38,11 @@ from repro.core.spec import SpTTNSpec
 # v2: plans carry a tuned ``backend`` (PLAN_JSON_VERSION 2).  v3: the key
 # gains a ``mesh`` component (mesh shape + partitioned axes + shard index,
 # DESIGN.md §7) and plans carry the mesh/shard fields (PLAN_JSON_VERSION
-# 3).  Older entries deserialize to a different schema and must be
-# unmatched, never read.
-CACHE_VERSION = 3
+# 3).  v4: the Pallas fusion axis — plans carry ``fused`` (PLAN_JSON_VERSION
+# 4) and entries stamp ``cache_version`` so a stale-but-parseable file is
+# an explicit miss, not a downstream schema error.  Older entries
+# deserialize to a different schema and must be unmatched, never read.
+CACHE_VERSION = 4
 
 
 def spec_signature(spec: SpTTNSpec) -> str:
@@ -127,11 +129,19 @@ class PlanCache:
         return os.path.join(self.cache_dir, f"plan-{key}.json")
 
     def get(self, key: str):
-        """Returns the cached SpTTNPlan or None (miss / corrupt entry)."""
+        """Returns the cached SpTTNPlan or None (miss / corrupt entry).
+
+        The entry's ``cache_version`` is checked explicitly before the
+        plan document is deserialized: a stale-but-parseable file (e.g. a
+        v3 entry surviving at a colliding name, or a hand-restored
+        backup) is a clean miss rather than a downstream schema error.
+        """
         from repro.core.executor import plan_from_dict
         try:
             with open(self._path(key)) as f:
                 doc = json.load(f)
+            if doc.get("cache_version") != CACHE_VERSION:
+                return None
             return plan_from_dict(doc["plan"])
         except (OSError, ValueError, KeyError, TypeError, AttributeError):
             # any malformed entry — invalid JSON, wrong shape, foreign
@@ -140,7 +150,8 @@ class PlanCache:
 
     def put(self, key: str, plan, meta: Mapping | None = None) -> str:
         from repro.core.executor import plan_to_dict
-        doc = {"plan": plan_to_dict(plan), "meta": dict(meta or {})}
+        doc = {"cache_version": CACHE_VERSION,
+               "plan": plan_to_dict(plan), "meta": dict(meta or {})}
         path = self._path(key)
         fd, tmp = tempfile.mkstemp(dir=self.cache_dir, suffix=".tmp")
         try:

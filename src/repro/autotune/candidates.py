@@ -29,6 +29,10 @@ class Candidate:
     full autotuning axis: the same (path, order) may win on one backend
     and lose on another, so each (schedule, backend) pair is measured
     separately and the winner's backend lands in the plan cache.
+    ``fused`` is the Pallas backend's second axis (DESIGN.md §6): run
+    detected reducing chains as one multi-level kernel (True) or as
+    staged per-term kernels (False); it is only expanded for schedules
+    whose path actually contains a provably fusible chain.
     """
 
     path: ContractionPath
@@ -36,12 +40,14 @@ class Candidate:
     cost: float          # model cost (TreeCost.evaluate — order-dependent)
     flops: float         # sparse-aware FLOP model (path-dependent)
     backend: str = "xla"
+    fused: bool = False
 
     @property
     def key(self) -> str:
         terms = "|".join(str(t) for t in self.path)
         orders = ";".join(",".join(a) for a in self.order)
-        return f"{terms}#{orders}@{self.backend}"
+        fz = "+fused" if self.fused else ""
+        return f"{terms}#{orders}@{self.backend}{fz}"
 
 
 def default_nnz_levels(spec: SpTTNSpec) -> dict[int, int]:
@@ -75,7 +81,11 @@ def generate_candidates(spec: SpTTNSpec,
     on ``backends[0]`` — is the pure-model pick).  On an all-dense
     network the Pallas backend degrades to XLA (the generator emits no
     sparse stages there), so it is folded into the XLA candidate rather
-    than measured twice — the expansion is never empty.
+    than measured twice — the expansion is never empty.  Pallas
+    candidates whose path contains a provably fusible reducing chain
+    (``fusible_chains``) are additionally expanded across the ``fused``
+    axis, so the staged and single-kernel chain lowerings compete on
+    wall clock.
     """
     cost = cost or ConstrainedBlas(bound=2)
     nnz_levels = dict(nnz_levels) if nnz_levels else default_nnz_levels(spec)
@@ -125,14 +135,22 @@ def generate_candidates(spec: SpTTNSpec,
     bad = [b for b in backends if b not in BACKENDS]
     if bad:
         raise ValueError(f"unknown backends {bad}; expected from {BACKENDS}")
+    # lazy import: the chain detector lives with the Pallas generator but
+    # is purely structural, so it costs nothing when pallas is off-axis
+    from repro.kernels.codegen import fusible_chains
     expanded, seen_keys = [], set()
     for c in out:
         for b in backends:
             if b == "pallas" and spec.sparse_input is None:
                 b = "xla"   # identical engines on an all-dense network
-            cand = dataclasses.replace(c, backend=b)
-            if cand.key in seen_keys:
-                continue
-            seen_keys.add(cand.key)
-            expanded.append(cand)
+            variants = (False,)
+            if b == "pallas" and fusible_chains(spec, c.path):
+                # fusion axis: staged AND single-kernel chain lowering
+                variants = (False, True)
+            for fz in variants:
+                cand = dataclasses.replace(c, backend=b, fused=fz)
+                if cand.key in seen_keys:
+                    continue
+                seen_keys.add(cand.key)
+                expanded.append(cand)
     return expanded

@@ -88,8 +88,12 @@ def measure_candidates(spec: SpTTNSpec,
         return time.perf_counter() - t0
 
     for cand in candidates:
+        kwargs = {}
+        if getattr(cand, "fused", False):
+            kwargs["strategy"] = "fused"   # single-kernel chain lowering
         ex = make_executor(spec, cand.path, cand.order,
-                           backend=getattr(cand, "backend", "xla"))
+                           backend=getattr(cand, "backend", "xla"),
+                           **kwargs)
         fn = jax.jit(lambda f, ex=ex: ex(arrays, f))
         for _ in range(config.warmup):
             run(fn)
@@ -99,11 +103,16 @@ def measure_candidates(spec: SpTTNSpec,
         if (best is not None and config.prune_ratio
                 and first > config.prune_ratio * best):
             results.append(Measurement(cand, first, pruned=True))
+            if stats is not None:
+                stats.pruned += 1
             continue
         times = [first] + [run(fn) for _ in range(config.repeats - 1)]
         med = float(np.median(times))
         results.append(Measurement(cand, med))
         best = med if best is None else min(best, med)
 
-    results.sort(key=lambda m: m.seconds)
+    # pruned entries carry a single first-call sample, not a median —
+    # they must never outrank (or tie) a fully measured candidate, so
+    # they sort strictly after every completed measurement
+    results.sort(key=lambda m: (m.pruned, m.seconds))
     return results

@@ -161,8 +161,12 @@ def tune(spec: SpTTNSpec,
                          prune_ratio=config.prune_ratio)
     results = measure_candidates(spec, candidates, arrays, factors,
                                  config=mcfg, stats=stats)
-    stats.pruned = sum(1 for m in results if m.pruned)
-    best = results[0]
+    # winner selection skips pruned entries explicitly: a pruned
+    # measurement is one first-call sample, not a median, and must never
+    # win (measure_candidates sorts them last, but the skip is the
+    # guarantee, not the sort).  All-pruned can only happen with a
+    # degenerate prune_ratio; fall back to the least-bad sample then.
+    best = next((m for m in results if not m.pruned), results[0])
     stats.best_seconds = best.seconds
     model_key = model_cand.key
     for m in results:
@@ -177,7 +181,8 @@ def tune(spec: SpTTNSpec,
                      flops=best.candidate.flops,
                      depth=path_depth(best.candidate.path),
                      backend=best.candidate.backend,
-                     mesh=None if config.mesh is None else dict(config.mesh))
+                     mesh=None if config.mesh is None else dict(config.mesh),
+                     fused=best.candidate.fused)
 
     if cache is not None:
         cache.put(key, plan, meta={
@@ -191,7 +196,8 @@ def tune(spec: SpTTNSpec,
             "timings": [
                 {"seconds": m.seconds, "pruned": m.pruned,
                  "cost": m.candidate.cost, "flops": m.candidate.flops,
-                 "backend": m.candidate.backend}
+                 "backend": m.candidate.backend,
+                 "fused": m.candidate.fused}
                 for m in results],
         })
 

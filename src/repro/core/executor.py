@@ -46,11 +46,13 @@ BACKENDS = ("reference", "xla", "pallas")
 # =========================================================================== #
 # Plan serialization (DESIGN.md §4) — plans are pattern-static, so a chosen
 # schedule survives process restarts via the autotuner's disk cache.
-# Version 2 added the ``backend`` field; version 3 adds the ``mesh``
-# shard-context field (DESIGN.md §7).  Any other version is rejected —
-# the forward/backward-compat rule is "re-plan, never guess".
+# Version 2 added the ``backend`` field; version 3 added the ``mesh``
+# shard-context field (DESIGN.md §7); version 4 adds the ``fused`` flag
+# (single-kernel chain lowering on the Pallas backend, DESIGN.md §6).
+# Any other version is rejected — the forward/backward-compat rule is
+# "re-plan, never guess".
 # =========================================================================== #
-PLAN_JSON_VERSION = 3
+PLAN_JSON_VERSION = 4
 
 
 def _operand_to_dict(op) -> dict:
@@ -85,6 +87,7 @@ def plan_to_dict(plan) -> dict:
         "depth": plan.depth,
         "backend": plan.backend,
         "mesh": None if plan.mesh is None else dict(plan.mesh),
+        "fused": bool(plan.fused),
     }
 
 
@@ -109,9 +112,12 @@ def plan_from_dict(doc: dict):
     mesh = doc.get("mesh")
     if mesh is not None and not isinstance(mesh, dict):
         raise ValueError(f"plan mesh must be an object or null, got {mesh!r}")
+    fused = doc.get("fused", False)
+    if not isinstance(fused, bool):
+        raise ValueError(f"plan fused must be a boolean, got {fused!r}")
     return SpTTNPlan(spec=spec, path=path, order=order, cost=doc["cost"],
                      flops=doc["flops"], depth=doc["depth"], backend=backend,
-                     mesh=mesh)
+                     mesh=mesh, fused=fused)
 
 
 def _tensor_ref(d):
@@ -382,70 +388,100 @@ class VectorizedExecutor:
         return jnp.einsum(f"{sa},{sb}->{so}", a, b)
 
     # -- main ----------------------------------------------------------- #
+    def _get_operand(self, csf: CSFArrays, factors: Mapping, env: dict,
+                     op) -> "FiberVal | DenseVal":
+        if op.is_sparse and op.name == self.spec.sparse_input.name:
+            return FiberVal(csf.values, csf.order, ())
+        if op.name in factors:
+            return DenseVal(jnp.asarray(factors[op.name]), op.indices)
+        return env[op.name]
+
+    def _to_dense(self, csf: CSFArrays, v: "FiberVal | DenseVal",
+                  want: tuple[str, ...]) -> jnp.ndarray:
+        """Materialize onto a dense array with index order ``want``."""
+        spec = self.spec
+        if isinstance(v, DenseVal):
+            perm = [v.indices.index(i) for i in want]
+            return jnp.transpose(v.array, perm)
+        # scatter fiber rows into a dense array over its sparse prefix
+        sp_inds = tuple(spec.sparse_indices[:v.level])
+        full = sp_inds + v.dense
+        shape = [spec.dims[i] for i in full]
+        coords = tuple(csf.fiber_coord[v.level][m] for m in range(v.level))
+        out = jnp.zeros(shape, v.array.dtype).at[coords].add(
+            v.array, unique_indices=True)  # distinct fibers: no dups
+        perm = [full.index(i) for i in want]
+        return jnp.transpose(out, perm)
+
+    def _chain_len(self, tid: int) -> int:
+        """Number of consecutive terms starting at ``tid`` this engine
+        executes as one unit.  The XLA engine is strictly one term per
+        lowering; the Pallas engine overrides this with its detected
+        fused chains (DESIGN.md §6)."""
+        return 1
+
+    def _exec_chain(self, csf: CSFArrays, factors: Mapping, env: dict,
+                    tid: int, length: int):
+        raise NotImplementedError   # pragma: no cover - chain engines only
+
+    def _exec_term(self, csf: CSFArrays, factors: Mapping, env: dict,
+                   term: Term) -> "FiberVal | DenseVal":
+        """Execute one contraction term, returning its intermediate value
+        (a final term's value is materialized by ``_materialize_output``)."""
+        a = self._get_operand(csf, factors, env, term.lhs)
+        b = self._get_operand(csf, factors, env, term.rhs)
+        out_inds = term.out.indices
+        term_sp = [i for i in term.indices if i in self.spos]
+        prefix_ok = (self._is_prefix(term.indices)
+                     and self._is_prefix(out_inds))
+        is_final = term.out.name == "OUT"
+
+        if term_sp and prefix_ok and (isinstance(a, FiberVal)
+                                      or isinstance(b, FiberVal)):
+            return self._exec_fiber_term(csf, term, a, b)
+        if (term_sp and is_final and self._is_prefix(term.indices)
+                and (isinstance(a, FiberVal) or isinstance(b, FiberVal))):
+            # final term keeping a non-prefix sparse subset (e.g. TTTc's
+            # OUT(e,n)): einsum at the term level, then scatter-add by
+            # the kept coordinate columns (implicitly summing the rest)
+            arr = self._exec_final_scatter(csf, term, a, b)
+            return DenseVal(arr, self.spec.output.indices)
+        # dense fallback (covers dense x dense and non-prefix cases)
+        ai = tuple(term.lhs.indices)
+        bi = tuple(term.rhs.indices)
+        da = self._to_dense(csf, a, ai)
+        db = self._to_dense(csf, b, bi)
+        arr = self._einsum(da, ai, db, bi, out_inds, fiber=False)
+        return DenseVal(arr, out_inds)
+
+    def _materialize_output(self, csf: CSFArrays,
+                            val: "FiberVal | DenseVal") -> jnp.ndarray:
+        spec = self.spec
+        if isinstance(val, DenseVal):
+            perm = [val.indices.index(i) for i in spec.output.indices]
+            return jnp.transpose(val.array, perm)
+        if spec.output_is_sparse:
+            # same-sparsity output: return leaf values (level = order)
+            assert val.level == csf.order and not val.dense
+            return val.array
+        return self._to_dense(csf, val, spec.output.indices)
+
     def __call__(self, csf: CSFArrays,
                  factors: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
-        spec = self.spec
         env: dict[str, FiberVal | DenseVal] = {}
-
-        def get_operand(op) -> FiberVal | DenseVal:
-            if op.is_sparse and op.name == spec.sparse_input.name:
-                return FiberVal(csf.values, csf.order, ())
-            if op.name in factors:
-                return DenseVal(jnp.asarray(factors[op.name]), op.indices)
-            return env[op.name]
-
-        def to_dense(v: FiberVal | DenseVal,
-                     want: tuple[str, ...]) -> jnp.ndarray:
-            """Materialize onto a dense array with index order ``want``."""
-            if isinstance(v, DenseVal):
-                perm = [v.indices.index(i) for i in want]
-                return jnp.transpose(v.array, perm)
-            # scatter fiber rows into a dense array over its sparse prefix
-            sp_inds = tuple(spec.sparse_indices[:v.level])
-            full = sp_inds + v.dense
-            shape = [spec.dims[i] for i in full]
-            coords = tuple(csf.fiber_coord[v.level][m] for m in range(v.level))
-            out = jnp.zeros(shape, v.array.dtype).at[coords].add(
-                v.array, unique_indices=True)  # distinct fibers: no dups
-            perm = [full.index(i) for i in want]
-            return jnp.transpose(out, perm)
-
-        for tid, term in enumerate(self.path):
-            a = get_operand(term.lhs)
-            b = get_operand(term.rhs)
-            out_inds = term.out.indices
-            term_sp = [i for i in term.indices if i in self.spos]
-            prefix_ok = (self._is_prefix(term.indices)
-                         and self._is_prefix(out_inds))
-            is_final = term.out.name == "OUT"
-
-            if term_sp and prefix_ok and (isinstance(a, FiberVal)
-                                          or isinstance(b, FiberVal)):
-                val = self._exec_fiber_term(csf, term, a, b)
-            elif (term_sp and is_final and self._is_prefix(term.indices)
-                  and (isinstance(a, FiberVal) or isinstance(b, FiberVal))):
-                # final term keeping a non-prefix sparse subset (e.g. TTTc's
-                # OUT(e,n)): einsum at the term level, then scatter-add by
-                # the kept coordinate columns (implicitly summing the rest)
-                return self._exec_final_scatter(csf, term, a, b)
+        tid, n = 0, len(self.path)
+        while tid < n:
+            length = self._chain_len(tid)
+            if length > 1:
+                val = self._exec_chain(csf, factors, env, tid, length)
+                term = self.path[tid + length - 1]
+                tid += length
             else:
-                # dense fallback (covers dense x dense and non-prefix cases)
-                ai = tuple(term.lhs.indices)
-                bi = tuple(term.rhs.indices)
-                da = to_dense(a, ai)
-                db = to_dense(b, bi)
-                arr = self._einsum(da, ai, db, bi, out_inds, fiber=False)
-                val = DenseVal(arr, out_inds)
-
-            if is_final:
-                if isinstance(val, DenseVal):
-                    perm = [val.indices.index(i) for i in spec.output.indices]
-                    return jnp.transpose(val.array, perm)
-                if spec.output_is_sparse:
-                    # same-sparsity output: return leaf values (level = order)
-                    assert val.level == csf.order and not val.dense
-                    return val.array
-                return to_dense(val, spec.output.indices)
+                term = self.path[tid]
+                val = self._exec_term(csf, factors, env, term)
+                tid += 1
+            if term.out.name == "OUT":
+                return self._materialize_output(csf, val)
             env[term.out.name] = val
         raise AssertionError("path had no final term")
 
@@ -703,6 +739,11 @@ def execute_plan(plan, csf, factors: Mapping, backend: str | None = None,
                                             backend=backend, **kwargs))
             total = part if total is None else total + part
         return total
+    resolved = backend or plan.backend
+    if resolved == "pallas" and getattr(plan, "fused", False):
+        # a fused-winner plan replays through the single-kernel chain
+        # lowering it was tuned with (DESIGN.md §6)
+        kwargs.setdefault("strategy", "fused")
     ex = make_executor(plan.spec, plan.path, plan.order,
-                       backend=backend or plan.backend, **kwargs)
+                       backend=resolved, **kwargs)
     return ex(csf, factors)

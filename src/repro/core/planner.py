@@ -32,7 +32,10 @@ class SpTTNPlan:
     ``mesh`` records the distributed shard context the plan was tuned
     under (mesh shape + partitioned axes + shard; ``None`` for a
     single-device plan) and is persisted in plan JSON v3 — see DESIGN.md
-    §7.  ``stats`` is attached by autotuned planning (search/cache
+    §7.  ``fused`` records whether the schedule won with the Pallas
+    backend's single-kernel chain lowering (DESIGN.md §6) — an
+    autotuning axis since plan JSON v4; it is False for non-Pallas
+    backends.  ``stats`` is attached by autotuned planning (search/cache
     accounting); it is excluded from equality so a cache round trip
     compares identical.
     """
@@ -45,6 +48,7 @@ class SpTTNPlan:
     depth: int
     backend: str = "xla"
     mesh: Mapping | None = None
+    fused: bool = False
     stats: object | None = dataclasses.field(default=None, compare=False,
                                              repr=False)
 

@@ -441,8 +441,9 @@ def make_distributed_tuned(spec: SpTTNSpec, coo: COOTensor, mesh: Mesh,
 
     first = live[0].plan
     homogeneous = all(
-        (sh.plan.path, sh.plan.order, sh.plan.backend)
-        == (first.path, first.order, first.backend) for sh in live)
+        (sh.plan.path, sh.plan.order, sh.plan.backend, sh.plan.fused)
+        == (first.path, first.order, first.backend, first.fused)
+        for sh in live)
     if prefer_collective and homogeneous and first.backend == "xla":
         dist.mode = "collective"
         dist.collective = make_distributed(spec, first, coo, mesh,
@@ -452,7 +453,11 @@ def make_distributed_tuned(spec: SpTTNSpec, coo: COOTensor, mesh: Mesh,
         return dist
 
     for sh in live:
-        kw = executor_kwargs if sh.plan.backend == "pallas" else {}
+        kw = dict(executor_kwargs) if sh.plan.backend == "pallas" else {}
+        if sh.plan.backend == "pallas" and sh.plan.fused:
+            # the shard's winner used the single-kernel chain lowering
+            # (DESIGN.md §6); replay through the same strategy
+            kw.setdefault("strategy", "fused")
         ex = make_executor(spec, sh.plan.path, sh.plan.order,
                            backend=sh.plan.backend, **kw)
         if sh.plan.backend == "reference":

@@ -7,13 +7,17 @@ is the ``backend="pallas"`` engine behind
 """
 from repro.kernels.codegen.executor import (DEFAULT_BLOCK,
                                             PallasPlanExecutor,
-                                            SegmentProfile, segment_profile)
-from repro.kernels.codegen.stages import (Stage, StageOperand,
+                                            SegmentProfile, fusible_chains,
+                                            segment_profile)
+from repro.kernels.codegen.stages import (ChainLink, Stage, StageOperand,
+                                          accumulator_type,
+                                          run_fused_chain_stage,
                                           run_product_stage,
                                           run_reduce_stage)
 
 __all__ = [
     "DEFAULT_BLOCK", "PallasPlanExecutor", "SegmentProfile",
-    "segment_profile", "Stage", "StageOperand",
+    "fusible_chains", "segment_profile", "ChainLink", "Stage",
+    "StageOperand", "accumulator_type", "run_fused_chain_stage",
     "run_product_stage", "run_reduce_stage",
 ]

@@ -35,14 +35,71 @@ import jax.numpy as jnp
 from repro.core.executor import (CSFArrays, VectorizedExecutor,
                                  default_interpret)
 from repro.core.loopnest import LoopOrder
-from repro.core.paths import ContractionPath
+from repro.core.paths import ContractionPath, consumer_map
 from repro.core.spec import SpTTNSpec
-from repro.kernels.codegen.stages import (Stage, StageOperand,
+from repro.kernels.codegen.stages import (ChainLink, Stage, StageOperand,
+                                          run_fused_chain_stage,
                                           run_product_stage,
                                           run_reduce_stage)
 from repro.kernels.util import padded_segment_layout, round_up
 
 DEFAULT_BLOCK = 128
+
+
+def fusible_chains(spec: SpTTNSpec,
+                   path: ContractionPath) -> dict[int, tuple[int, ...]]:
+    """Detect chains of reducing terms the fused-chain lowering can prove
+    safe (DESIGN.md §6): maximal runs of *consecutive* path terms where
+    each term's output is consumed by exactly the next term, every term
+    reduces along the sparse operand's CSF path (storage-prefix indices,
+    strictly decreasing output level, the consumer contracting at exactly
+    the intermediate's level), and each non-first term's other operand is
+    an original dense input (liftable onto that level's fibers without
+    further recursion).  Returns ``{start_tid: (tid, ...)}`` for chains of
+    length >= 2; everything else stays on the staged per-term path.
+
+    Structural only — no CSF needed — so the autotuner can use it to
+    decide whether ``fused`` is a meaningful candidate axis for a
+    schedule before any operand exists.
+    """
+    spos = {s: i for i, s in enumerate(spec.sparse_indices)}
+    dense_inputs = {t.name for t in spec.inputs if not t.is_sparse}
+
+    def slv(inds) -> int:
+        return max((spos[i] + 1 for i in inds if i in spos), default=0)
+
+    def prefix(inds) -> bool:
+        sp = sorted(spos[i] for i in inds if i in spos)
+        return sp == list(range(len(sp)))
+
+    def reducing(term) -> bool:
+        return (any(i in spos for i in term.indices)
+                and prefix(term.indices) and prefix(term.out.indices)
+                and slv(term.out.indices) < slv(term.indices))
+
+    cons = consumer_map(path)
+    chains: dict[int, tuple[int, ...]] = {}
+    used: set[int] = set()
+    for t in range(len(path)):
+        if t in used or not reducing(path[t]):
+            continue
+        tids = [t]
+        k = t
+        while k + 1 < len(path) and cons.get(k) == k + 1:
+            nxt = path[k + 1]
+            inter = path[k].out.name
+            other = (nxt.rhs if nxt.lhs.name == inter
+                     else nxt.lhs if nxt.rhs.name == inter else None)
+            if (other is None or other.name not in dense_inputs
+                    or not reducing(nxt)
+                    or slv(nxt.indices) != slv(path[k].out.indices)):
+                break
+            tids.append(k + 1)
+            k += 1
+        if len(tids) > 1:
+            chains[t] = tuple(tids)
+            used.update(tids)
+    return chains
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,15 +161,22 @@ class PallasPlanExecutor(VectorizedExecutor):
                  order: LoopOrder, block: int = DEFAULT_BLOCK,
                  interpret: bool | None = None, strategy: str = "auto"):
         super().__init__(spec, path, order)
-        if strategy not in ("auto", "row", "segsum"):
+        if strategy not in ("auto", "row", "segsum", "fused"):
             raise ValueError(f"unknown strategy {strategy!r}")
         self.block = block
         self.interpret = default_interpret() if interpret is None \
             else interpret
         self.strategy = strategy
-        # (lvl, out_lvl) -> "row" | "segsum", recorded at trace time for
-        # inspection (tests, distributed per-shard strategy reporting)
+        # (lvl, out_lvl) -> "row" | "segsum" | "fused", recorded at trace
+        # time for inspection (tests, distributed per-shard strategy
+        # reporting).  A fused chain records ONE entry keyed by its
+        # (innermost lvl, final out_lvl) — one entry == one kernel launch
+        # for the whole chain.
         self.stage_strategy: dict[tuple[int, int], str] = {}
+        # start tid -> member tids of each provably safe reducing chain;
+        # executed as one kernel only under strategy="fused"
+        self._chains = (fusible_chains(spec, path)
+                        if strategy == "fused" else {})
 
     # -- static layouts (pattern-fixed, cached on the CSFArrays) -------- #
     def _layout(self, csf: CSFArrays, lvl: int, out_lvl: int):
@@ -133,8 +197,10 @@ class PallasPlanExecutor(VectorizedExecutor):
         chosen from its segment profile (per-shard in the distributed
         engine) unless forced by ``strategy``.  Reads only the O(1)
         fiber counts — :func:`segment_profile` exists for callers that
-        want the full distribution."""
-        if self.strategy != "auto":
+        want the full distribution.  Under ``strategy="fused"`` only
+        chain members fuse; stages outside a chain fall back to the
+        profile-driven choice here."""
+        if self.strategy not in ("auto", "fused"):
             return self.strategy
         nfib = csf.nfib[lvl]
         nseg = csf.nfib[out_lvl] if out_lvl > 0 else 1
@@ -145,6 +211,143 @@ class PallasPlanExecutor(VectorizedExecutor):
         choice = self.strategy_for(csf, lvl, out_lvl)
         self.stage_strategy[(lvl, out_lvl)] = choice
         return choice == "row"
+
+    # -- fused reducing chains (DESIGN.md §6) --------------------------- #
+    def _chain_len(self, tid: int) -> int:
+        chain = self._chains.get(tid)
+        return len(chain) if chain else 1
+
+    def _chain_layout(self, csf: CSFArrays, lvl0: int, levels: tuple):
+        """Per-block segment ids / first flags / last flags at every chain
+        level, plus the padded innermost layout (pattern-static, cached on
+        the CSFArrays like the single-stage layouts).
+
+        ``levels`` are the chain's output levels innermost-first (e.g.
+        MTTKRP's ``(2, 1)``); nesting of the CSF segment maps makes each
+        outer array a composition of the inner one.
+        """
+        cache = csf.__dict__.setdefault("_codegen_layouts", {})
+        key = ("chain", lvl0, levels, self.block)
+        if key in cache:
+            return cache[key]
+        seg0 = np.asarray(csf.seg[(lvl0, levels[0])])
+        lay = padded_segment_layout(seg0, csf.nfib[levels[0]], self.block)
+
+        def firsts_of(seg: np.ndarray) -> np.ndarray:
+            f = np.zeros(len(seg), np.int32)
+            f[0] = 1
+            f[1:] = seg[1:] != seg[:-1]
+            return f
+
+        def lasts_of(seg: np.ndarray) -> np.ndarray:
+            l = np.zeros(len(seg), np.int32)
+            l[-1] = 1
+            l[:-1] = seg[1:] != seg[:-1]
+            return l
+
+        segs = [lay.block_seg.astype(np.int32)]
+        for prev, lvl in zip(levels, levels[1:]):
+            up = (np.asarray(csf.seg[(prev, lvl)])[segs[-1]] if lvl > 0
+                  else np.zeros_like(segs[-1]))
+            segs.append(up.astype(np.int32))
+        firsts = [lay.block_first.astype(np.int32)] + \
+            [firsts_of(s) for s in segs[1:]]
+        lasts = [lasts_of(s) for s in segs]
+        entry = (lay, jnp.asarray(lay.gather),
+                 jnp.asarray(lay.mask)[:, None],
+                 tuple(jnp.asarray(s) for s in segs),
+                 tuple(jnp.asarray(f) for f in firsts),
+                 tuple(jnp.asarray(l) for l in lasts[:-1]))
+        cache[key] = entry
+        return entry
+
+    def _exec_chain(self, csf: CSFArrays, factors, env: dict, tid: int,
+                    length: int):
+        """Lower a whole detected reducing chain to ONE Pallas kernel
+        (run_fused_chain_stage): the innermost term's block contraction
+        feeds a VMEM scratch crossing buffer per intermediate level, and
+        segment-close flushes carry partials outward — no HBM round trip
+        between the chain's stages."""
+        from repro.core.executor import DenseVal, FiberVal
+
+        tids = self._chains[tid]
+        terms = [self.path[k] for k in tids]
+        first = terms[0]
+        lvl0 = self._sparse_level(first.indices)
+        levels = tuple(self._sparse_level(t.out.indices) for t in terms)
+        dims = self.spec.dims
+        sp = set(self.spos)
+
+        if csf.nfib.get(lvl0, 0) == 0:
+            # degenerate pattern: fall back to the staged per-term path
+            val = None
+            for k in tids:
+                val = self._exec_term(csf, factors, env, self.path[k])
+                if k != tids[-1]:
+                    env[self.path[k].out.name] = val
+            return val
+
+        a = self._get_operand(csf, factors, env, first.lhs)
+        b = self._get_operand(csf, factors, env, first.rhs)
+        fa, da = self._lift(csf, a, first.lhs, lvl0)
+        fb, db = self._lift(csf, b, first.rhs, lvl0)
+        dtype = jnp.result_type(fa.dtype, fb.dtype)
+
+        operands, arrays = [], []
+        for arr, inds in ((fa, da), (fb, db)):
+            shape = tuple(dims[i] for i in inds)
+            operands.append(StageOperand(
+                subs="".join(self._letter[i] for i in inds),
+                shape=shape, fiber=arr.ndim == len(inds) + 1))
+            arrays.append(arr)
+        out_dense0 = tuple(i for i in first.out.indices if i not in sp)
+        out_subs = "".join(self._letter[i] for i in out_dense0)
+        out_shape = tuple(dims[i] for i in out_dense0)
+
+        lay, gather, mask, segs, firsts, lasts = \
+            self._chain_layout(csf, lvl0, levels)
+        nfib0 = csf.nfib[lvl0]
+        padded = [
+            arr.reshape(nfib0, -1)[gather] if op.fiber
+            else arr.reshape(1, -1)
+            for arr, op in zip(arrays, operands)]
+        stage = Stage(operands=tuple(operands), out_subs=out_subs,
+                      out_shape=out_shape, reduce=True, block=self.block,
+                      nseg=lay.nseg, interpret=self.interpret)
+
+        links, link_arrays = [], []
+        for pos, term in enumerate(terms[1:]):
+            lvl_k = levels[pos]          # level the intermediate lives on
+            inter = terms[pos].out.name
+            other = term.rhs if term.lhs.name == inter else term.lhs
+            val = self._get_operand(csf, factors, env, other)
+            arr, dense_inds = self._lift(csf, val, other, lvl_k)
+            link_ops = [StageOperand(subs=out_subs, shape=out_shape,
+                                     fiber=True)]
+            fiber = arr.ndim == len(dense_inds) + 1
+            link_ops.append(StageOperand(
+                subs="".join(self._letter[i] for i in dense_inds),
+                shape=tuple(dims[i] for i in dense_inds), fiber=fiber))
+            link_arrays.append(
+                arr.reshape(csf.nfib[lvl_k], -1) if fiber
+                else arr.reshape(1, -1))
+            out_dense = tuple(i for i in term.out.indices if i not in sp)
+            out_subs = "".join(self._letter[i] for i in out_dense)
+            out_shape = tuple(dims[i] for i in out_dense)
+            links.append(ChainLink(operands=tuple(link_ops),
+                                   out_subs=out_subs, out_shape=out_shape))
+
+        out_lvl = levels[-1]
+        nseg_out = csf.nfib[out_lvl] if out_lvl > 0 else 1
+        dtype = jnp.result_type(dtype, *[a.dtype for a in link_arrays])
+        out2d = run_fused_chain_stage(stage, tuple(links), segs, firsts,
+                                      lasts, mask, padded, link_arrays,
+                                      nseg_out, dtype)
+        self.stage_strategy[(lvl0, out_lvl)] = "fused"
+        arr = out2d.reshape((nseg_out,) + out_shape)
+        if out_lvl == 0:
+            return DenseVal(arr.reshape(out_shape), out_dense)
+        return FiberVal(arr, out_lvl, out_dense)
 
     # -- the lowering unit ---------------------------------------------- #
     def _fiber_contract(self, csf: CSFArrays, fa, da, fb, db,

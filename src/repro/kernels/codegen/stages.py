@@ -14,7 +14,15 @@ structure:
   zeroed exactly when a new segment's first block arrives — Algorithm 2's
   buffer-reset rule, keyed off the scalar-prefetched ``block_first``;
 * a *product* stage keeps the fiber axis (same-level output, e.g. the
-  TTTP leaf or a final scatter term) and writes blocks 1:1.
+  TTTP leaf or a final scatter term) and writes blocks 1:1;
+* a *fused chain* stage (:func:`run_fused_chain_stage`) lowers a whole
+  chain of reducing terms sharing the sparse operand's CSF path into ONE
+  kernel: per chain level a VMEM scratch buffer holds that level's
+  crossing buffer, each with its own scalar-prefetched ``block_first``
+  reset, and an inner buffer flushes through its link's einsum into the
+  next level's buffer when its segment closes — Algorithm 2's reset rule
+  applied at every depth of a single sequential grid, eliminating the
+  inter-stage HBM round trip of the staged lowering.
 
 Stages are pure descriptions (shapes, subscripts, block size); emission
 happens at trace time, so one jit of the enclosing executor compiles the
@@ -46,6 +54,13 @@ class StageOperand:
     @property
     def flat_dim(self) -> int:
         return math.prod(self.shape)
+
+
+def accumulator_type(dtype) -> jnp.dtype:
+    """Accumulation dtype for a stage's in-kernel einsum: at least float32
+    (MXU accumulation width), widened to match wider operands — float64
+    stages accumulate at float64, never silently at float32."""
+    return jnp.promote_types(jnp.float32, dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +115,8 @@ def run_reduce_stage(stage: Stage, block_seg: jnp.ndarray,
     row (the crossing buffer) resident in VMEM and revisited across its
     blocks; ``block_first`` fires the Algorithm-2 reset."""
 
+    acc_t = accumulator_type(dtype)
+
     def kernel(bs_ref, bf_ref, m_ref, *refs):
         in_refs, o_ref = refs[:-1], refs[-1]
         b = pl.program_id(0)
@@ -110,7 +127,7 @@ def run_reduce_stage(stage: Stage, block_seg: jnp.ndarray,
 
         vals = _load_operands(stage, in_refs, m_ref)
         part = jnp.einsum(stage.expr, *vals,
-                          preferred_element_type=jnp.float32)
+                          preferred_element_type=acc_t)
         o_ref[...] += part.reshape(1, stage.out_flat_dim).astype(o_ref.dtype)
 
     P = mask.shape[0]
@@ -142,11 +159,13 @@ def run_product_stage(stage: Stage, padded, dtype) -> jnp.ndarray:
     """Per-fiber fused product (no sparse reduction): blocks map 1:1 to
     output blocks; pad rows are sliced off by the caller."""
 
+    acc_t = accumulator_type(dtype)
+
     def kernel(*refs):
         in_refs, o_ref = refs[:-1], refs[-1]
         vals = _load_operands(stage, in_refs, None)
         part = jnp.einsum(stage.expr, *vals,
-                          preferred_element_type=jnp.float32)
+                          preferred_element_type=acc_t)
         o_ref[...] = part.reshape(stage.block,
                                   stage.out_flat_dim).astype(o_ref.dtype)
 
@@ -168,3 +187,136 @@ def run_product_stage(stage: Stage, padded, dtype) -> jnp.ndarray:
         out_shape=jax.ShapeDtypeStruct((P, stage.out_flat_dim), dtype),
         interpret=stage.interpret,
     )(*padded)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainLink:
+    """One outer level of a fused reducing chain.
+
+    ``operands[0]`` is the inner crossing buffer (always a fiber operand:
+    one level-``lvl`` row per flush); the rest are the link term's other
+    operands — fiber operands arrive as scalar-prefetch-indexed ``(1, D)``
+    blocks (the row of the level-``lvl`` fiber whose segment just closed),
+    broadcast operands as shared ``(1, D)`` blocks.  ``expr`` reduces the
+    singleton fiber axis away, so a flush adds one ``out_shape`` partial
+    into the next level's buffer.
+    """
+
+    operands: tuple[StageOperand, ...]
+    out_subs: str
+    out_shape: tuple[int, ...]
+
+    @property
+    def out_flat_dim(self) -> int:
+        return math.prod(self.out_shape)
+
+    @property
+    def expr(self) -> str:
+        ins = ",".join(("Z" + op.subs) if op.fiber else op.subs
+                       for op in self.operands)
+        return f"{ins}->{self.out_subs}"
+
+
+def run_fused_chain_stage(stage: Stage, links: tuple[ChainLink, ...],
+                          seg_lvls, first_lvls, last_lvls,
+                          mask: jnp.ndarray, padded, link_arrays,
+                          nseg_out: int, dtype) -> jnp.ndarray:
+    """One kernel for a whole chain of reducing terms (Algorithm 2 at
+    every depth of a single sequential grid).
+
+    The innermost ``stage`` accumulates block partials into the first
+    VMEM scratch buffer; when level ``k``'s segment closes
+    (``last_lvls[k]``), buffer ``k`` flushes through ``links[k]``'s
+    einsum into buffer ``k+1`` (the last link flushes into the kernel
+    output row, whose BlockSpec follows the outermost segment map).
+    Per-level ``first_lvls[k]`` fires that buffer's Algorithm-2 reset.
+    Segment maps are nested (CSF levels), so an outer segment's first
+    block is also an inner segment's first block and flush order
+    inner-to-outer within one grid step is exact.
+
+    ``seg_lvls[k]`` is the per-block segment id at chain level ``k`` —
+    levels ``0..C-2`` drive the link operands' scalar-prefetched index
+    maps, level ``C-1`` drives the output BlockSpec.
+    """
+    C = len(links) + 1           # chain length in terms
+    acc_t = accumulator_type(dtype)
+    nsc = 3 * C - 1              # C segs + C firsts + (C-1) lasts
+    out_flat = links[-1].out_flat_dim
+    n_stage = len(stage.operands)
+
+    def kernel(*refs):
+        segs = refs[:C]
+        firsts = refs[C:2 * C]
+        lasts = refs[2 * C:nsc]
+        del segs                 # index maps consume them; kernel does not
+        m_ref = refs[nsc]
+        in_refs = refs[nsc + 1:nsc + 1 + n_stage]
+        link_refs = refs[nsc + 1 + n_stage:-1 - (C - 1)]
+        o_ref = refs[-1 - (C - 1)]
+        bufs = refs[len(refs) - (C - 1):]
+        b = pl.program_id(0)
+
+        for j in range(C - 1):
+            @pl.when(firsts[j][b] == 1)
+            def _reset(buf=bufs[j]):
+                buf[...] = jnp.zeros_like(buf)
+
+        @pl.when(firsts[C - 1][b] == 1)
+        def _reset_out():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        vals = _load_operands(stage, in_refs, m_ref)
+        part = jnp.einsum(stage.expr, *vals, preferred_element_type=acc_t)
+        bufs[0][...] += part.reshape(1, stage.out_flat_dim)
+
+        pos = 0
+        for j, link in enumerate(links):
+            dst = bufs[j + 1] if j + 1 < C - 1 else o_ref
+            others = link_refs[pos:pos + len(link.operands) - 1]
+            pos += len(link.operands) - 1
+
+            @pl.when(lasts[j][b] == 1)
+            def _flush(j=j, link=link, dst=dst, others=others):
+                iv = [bufs[j][...].reshape((1,) + link.operands[0].shape)]
+                for ref, op in zip(others, link.operands[1:]):
+                    v = ref[...]
+                    iv.append(v.reshape(((1,) + op.shape) if op.fiber
+                                        else op.shape))
+                out = jnp.einsum(link.expr, *iv,
+                                 preferred_element_type=acc_t)
+                dst[...] += out.reshape(1, link.out_flat_dim).astype(
+                    dst.dtype)
+
+    P = mask.shape[0]
+    in_specs = [pl.BlockSpec((stage.block, 1), lambda i, *s: (i, 0))]
+    for op in stage.operands:
+        if op.fiber:
+            in_specs.append(pl.BlockSpec((stage.block, op.flat_dim),
+                                         lambda i, *s: (i, 0)))
+        else:
+            in_specs.append(pl.BlockSpec((1, op.flat_dim),
+                                         lambda i, *s: (0, 0)))
+    for j, link in enumerate(links):
+        for op in link.operands[1:]:
+            if op.fiber:
+                in_specs.append(pl.BlockSpec(
+                    (1, op.flat_dim), lambda i, *s, j=j: (s[j][i], 0)))
+            else:
+                in_specs.append(pl.BlockSpec((1, op.flat_dim),
+                                             lambda i, *s: (0, 0)))
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=nsc,
+        grid=(P // stage.block,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, out_flat),
+                               lambda i, *s: (s[C - 1][i], 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, link.operands[0].flat_dim), acc_t)
+            for link in links],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((nseg_out, out_flat), dtype),
+        interpret=stage.interpret,
+    )(*seg_lvls, *first_lvls, *last_lvls, mask, *padded, *link_arrays)

@@ -1,7 +1,7 @@
 """Pallas codegen backend: generated kernels for arbitrary SpTTN plans
 must match the Algorithm-2 reference interpreter (and the dense oracle)
 on every paper kernel, under both reduction-lowering strategies, and the
-backend must round-trip through plan JSON v2, the autotuner, and the
+backend must round-trip through plan JSON v4, the autotuner, and the
 disk plan cache.  All Pallas execution is interpret-mode (CPU container;
 TPU is the compile target)."""
 import itertools
@@ -153,7 +153,7 @@ def test_handwritten_mttkrp_is_a_regression_fixture():
 
 
 # --------------------------------------------------------------------- #
-# backend registry + plan JSON v3
+# backend registry + plan JSON v4
 # --------------------------------------------------------------------- #
 def test_make_executor_backends_share_semantics():
     spec = S.ttmc3(6, 7, 8, 4, 3)
@@ -174,24 +174,31 @@ def test_make_executor_backends_share_semantics():
         make_executor(spec, p.path, p.order, backend="triton")
 
 
-def test_plan_json_v3_round_trip_with_backend():
+def test_plan_json_v4_round_trip_with_backend():
     spec = S.mttkrp(8, 6, 5, 3)
     p = plan(spec)
     import dataclasses
-    tagged = dataclasses.replace(p, backend="pallas")
+    tagged = dataclasses.replace(p, backend="pallas", fused=True)
     doc = plan_to_dict(tagged)
-    assert doc["version"] == PLAN_JSON_VERSION == 3
+    assert doc["version"] == PLAN_JSON_VERSION == 4
     assert doc["backend"] == "pallas"
     assert doc["mesh"] is None            # single-device plan
+    assert doc["fused"] is True
     rt = plan_from_json(plan_to_json(tagged))
-    assert rt == tagged and rt.backend == "pallas"
-    # a plan serialized without an explicit backend defaults to xla
+    assert rt == tagged and rt.backend == "pallas" and rt.fused
+    # a plan serialized without an explicit backend defaults to xla,
+    # and one without an explicit fused flag defaults to staged
     doc2 = plan_to_dict(p)
     del doc2["backend"]
-    assert plan_from_dict(doc2).backend == "xla"
+    del doc2["fused"]
+    rt2 = plan_from_dict(doc2)
+    assert rt2.backend == "xla" and rt2.fused is False
+    # a non-boolean fused flag is rejected, not coerced
+    with pytest.raises(ValueError, match="plan fused"):
+        plan_from_dict(dict(plan_to_dict(p), fused="yes"))
 
 
-@pytest.mark.parametrize("version", [1, 2, None, "3"])
+@pytest.mark.parametrize("version", [1, 2, 3, None, "4"])
 def test_plan_json_rejects_foreign_versions(version):
     """Forward/backward compat is re-plan-never-guess: any version other
     than the current one is rejected outright."""
@@ -307,6 +314,8 @@ def test_cached_plan_meta_records_backends(tmp_path):
     assert len(files) == 1
     with open(tmp_path / files[0]) as f:
         doc = json.load(f)
-    assert doc["plan"]["version"] == 3
+    assert doc["plan"]["version"] == 4
+    assert doc["cache_version"] == 4
     assert set(doc["meta"]["backends"]) == {"xla", "pallas"}
-    assert all("backend" in t for t in doc["meta"]["timings"])
+    assert all("backend" in t and "fused" in t
+               for t in doc["meta"]["timings"])

@@ -1,0 +1,219 @@
+"""Codegen edge cases (ISSUE 4 satellite): degenerate sparsity patterns
+through every reduction lowering, and an empty shard through distributed
+replay.
+
+* zero-nnz operands — all strategies (row/segsum/fused/auto) must return
+  exact zeros of the right shape, jit-compatible;
+* single-segment layouts — every nonzero under one output row, so the
+  VMEM accumulator is revisited by every block and reset exactly once;
+* all-singleton-segment layouts — every fiber its own segment, the
+  maximal-padding regime that drives the row/segsum decision apart;
+* an empty shard in distributed replay — partitioning that leaves one
+  shard with no nonzeros must tune/execute the rest and still sum to
+  the exact global output.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spec as S
+from repro.core.executor import (CSFArrays, dense_oracle, execute_plan,
+                                 reference_execute)
+from repro.core.planner import plan
+from repro.kernels.codegen import PallasPlanExecutor, segment_profile
+from repro.sparse import build_csf, random_sparse
+from repro.sparse.coo import from_coords
+from tests.conftest import run_with_devices
+
+STRATEGIES = ["row", "segsum", "fused", "auto"]
+
+
+def _factors(spec, rng):
+    return {t.name: rng.standard_normal(
+        [spec.dims[i] for i in t.indices]).astype(np.float32)
+        for t in spec.inputs if not t.is_sparse}
+
+
+# --------------------------------------------------------------------- #
+# zero-nnz operands
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_zero_nnz_operand_all_strategies(strategy):
+    spec = S.mttkrp(6, 7, 8, 4)
+    csf = build_csf(from_coords(np.zeros((0, 3), np.int64),
+                                np.zeros((0,), np.float32), (6, 7, 8)))
+    assert csf.nnz == 0 and csf.nnz_levels() == {0: 1, 1: 0, 2: 0, 3: 0}
+    arrays = CSFArrays.from_csf(csf)
+    rng = np.random.default_rng(0)
+    factors = {k: jnp.asarray(v) for k, v in _factors(spec, rng).items()}
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8,
+                            interpret=True, strategy=strategy)
+    fn = jax.jit(lambda f: ex(arrays, f))
+    out = np.asarray(fn(factors))
+    assert out.shape == (6, 4)
+    np.testing.assert_array_equal(out, np.zeros((6, 4), np.float32))
+
+
+def test_zero_nnz_segment_profile():
+    csf = build_csf(from_coords(np.zeros((0, 3), np.int64),
+                                np.zeros((0,), np.float32), (6, 7, 8)))
+    arrays = CSFArrays.from_csf(csf)
+    prof = segment_profile(arrays, 3, 1)
+    assert prof.nfib == 0 and prof.max_seg == 0 and prof.mean_seg == 0.0
+
+
+# --------------------------------------------------------------------- #
+# single-segment layouts: one output row owns every fiber
+# --------------------------------------------------------------------- #
+def _single_segment_csf():
+    # all nonzeros share i=2: level-1 has ONE fiber, every leaf block
+    # accumulates into the same VMEM row (reset exactly once)
+    rng = np.random.default_rng(5)
+    js, ks = np.meshgrid(np.arange(7), np.arange(8), indexing="ij")
+    coords = np.stack([np.full(js.size, 2), js.ravel(), ks.ravel()], axis=1)
+    keep = rng.random(len(coords)) < 0.6
+    coords = coords[keep]
+    vals = rng.standard_normal(len(coords)).astype(np.float32)
+    return build_csf(from_coords(coords, vals, (6, 7, 8)))
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_single_segment_layout(strategy):
+    spec = S.mttkrp(6, 7, 8, 4)
+    csf = _single_segment_csf()
+    assert csf.nfib[1] == 1
+    arrays = CSFArrays.from_csf(csf)
+    rng = np.random.default_rng(1)
+    factors = _factors(spec, rng)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8,
+                            interpret=True, strategy=strategy)
+    out = np.asarray(ex(arrays, factors))
+    ref = reference_execute(spec, p.path, p.order, csf, factors)
+    np.testing.assert_allclose(out, ref, atol=1e-5, err_msg=strategy)
+
+
+# --------------------------------------------------------------------- #
+# all-singleton segments: every fiber its own output row
+# --------------------------------------------------------------------- #
+def _singleton_segment_csf():
+    # distinct (i, j) per nonzero and one k each: every level-2 segment
+    # holds exactly one leaf fiber, so block-per-segment padding is the
+    # worst case the segsum lowering exists for
+    coords = np.array([[i, j, (i + j) % 8]
+                       for i in range(6) for j in range(7)])
+    rng = np.random.default_rng(6)
+    vals = rng.standard_normal(len(coords)).astype(np.float32)
+    return build_csf(from_coords(coords, vals, (6, 7, 8)))
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_all_singleton_segments(strategy):
+    spec = S.mttkrp(6, 7, 8, 4)
+    csf = _singleton_segment_csf()
+    arrays = CSFArrays.from_csf(csf)
+    prof = segment_profile(arrays, 3, 2)
+    assert prof.max_seg == 1 and prof.nfib == prof.nseg
+    rng = np.random.default_rng(2)
+    factors = _factors(spec, rng)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8,
+                            interpret=True, strategy=strategy)
+    out = np.asarray(ex(arrays, factors))
+    ref = reference_execute(spec, p.path, p.order, csf, factors)
+    np.testing.assert_allclose(out, ref, atol=1e-5, err_msg=strategy)
+    if strategy == "auto":
+        # the worst-padding profile must steer auto away from row when
+        # the decision formula says so — and whatever it picks is exact
+        assert set(ex.stage_strategy.values()) <= {"row", "segsum"}
+
+
+def test_single_nnz_fused_chain():
+    """One nonzero: every level has one fiber, every segment is first
+    AND last — the fused kernel's reset+accumulate+flush all fire in a
+    single grid step."""
+    spec = S.mttkrp(6, 7, 8, 4)
+    csf = build_csf(from_coords(np.array([[1, 2, 3]]),
+                                np.array([2.0], np.float32), (6, 7, 8)))
+    arrays = CSFArrays.from_csf(csf)
+    rng = np.random.default_rng(3)
+    factors = _factors(spec, rng)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8,
+                            interpret=True, strategy="fused")
+    out = np.asarray(ex(arrays, factors))
+    np.testing.assert_allclose(out, dense_oracle(spec, csf, factors),
+                               atol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# empty shard through distributed replay
+# --------------------------------------------------------------------- #
+def test_execute_plan_with_empty_shard():
+    """Sharded execute_plan where one shard carries zero nonzeros: the
+    empty shard contributes exact zeros and the sum stays exact."""
+    spec = S.mttkrp(8, 6, 5, 4)
+    coords = np.array([[i, j, k] for i in (0, 2, 4, 6)
+                       for j in range(3) for k in range(2)])
+    rng = np.random.default_rng(4)
+    coo = from_coords(coords,
+                      rng.standard_normal(len(coords)).astype(np.float32),
+                      (8, 6, 5))
+    csf = build_csf(coo)
+    factors = _factors(spec, rng)
+    from repro.distributed import partition_nonzeros
+    parts = partition_nonzeros(coo, {0: 2})      # odd-i shard is empty
+    assert parts[1].nnz == 0 and parts[0].nnz == coo.nnz
+    shards = [CSFArrays.from_csf(build_csf(c)) for c in parts]
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    out = np.asarray(execute_plan(p, shards, factors))
+    np.testing.assert_allclose(out, dense_oracle(spec, csf, factors),
+                               atol=1e-5)
+
+
+def test_distributed_replay_with_empty_shard(tmp_path):
+    """make_distributed_tuned over a partition that leaves one shard
+    empty: the shard is recorded with no plan, tuning covers only live
+    shards, and replay still matches the single-device reference."""
+    code = f"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.autotune import TunerConfig
+from repro.core import spec as S
+from repro.core.executor import dense_oracle
+from repro.distributed import make_distributed_tuned
+from repro.sparse import build_csf
+from repro.sparse.coo import from_coords
+
+spec = S.mttkrp(8, 6, 5, 4)
+coords = np.array([[i, j, k] for i in (0, 2, 4, 6)
+                   for j in range(3) for k in range(2)])
+rng = np.random.default_rng(4)
+coo = from_coords(coords,
+                  rng.standard_normal(len(coords)).astype(np.float32),
+                  (8, 6, 5))
+csf = build_csf(coo)
+factors = {{t.name: jnp.asarray(rng.standard_normal(
+    [spec.dims[i] for i in t.indices]).astype(np.float32))
+    for t in spec.inputs if not t.is_sparse}}
+mesh = jax.make_mesh((2,), ("data",))
+cfg = TunerConfig(max_paths=2, max_candidates=1, orders_per_path=1,
+                  warmup=1, repeats=2, backends=("pallas",))
+dist = make_distributed_tuned(spec, coo, mesh, {{0: "data"}},
+                              cache_dir={str(tmp_path)!r}, tuner=cfg,
+                              block=8)
+assert dist.mode == "replay"
+assert dist.nnz_per_shard == [coo.nnz, 0]
+assert dist.shards[1].plan is None and dist.shards[1].stats is None
+assert dist.shards[0].plan is not None
+out = dist(factors)
+np.testing.assert_allclose(
+    out, dense_oracle(spec, csf,
+                      {{k: np.asarray(v) for k, v in factors.items()}}),
+    atol=1e-5)
+print("EMPTY-SHARD-OK")
+"""
+    out = run_with_devices(code, 2)
+    assert "EMPTY-SHARD-OK" in out

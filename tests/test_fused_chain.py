@@ -1,0 +1,376 @@
+"""Single-kernel multi-level fused codegen (DESIGN.md §6, ISSUE 4).
+
+Covers: (a) a chain of reducing terms sharing the sparse operand's CSF
+path (MTTKRP's leaf→2 then 2→1) executes as ONE ``pallas_call`` — one
+``stage_strategy`` entry for the whole chain — with 1e-5 parity against
+``reference_execute``; (b) chain detection accepts exactly the provably
+safe shapes (consecutive consumers, dense-factor links, strictly
+descending levels) and declines the rest; (c) fused/staged is an
+autotuning axis whose winner persists through plan JSON v4 (v3
+rejected) and replays through ``execute_plan``; (d) the satellite
+bugfixes — stage accumulator dtype derived from the operands (float64
+never silently truncated to float32), pruned measurements never winning
+the search, and the plan cache rejecting stale-but-parseable entries by
+explicit version guard."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.autotune import TunerConfig, generate_candidates, tune
+from repro.autotune.cache import CACHE_VERSION, PlanCache
+from repro.autotune.candidates import Candidate
+from repro.autotune.measure import Measurement
+from repro.core import spec as S
+from repro.core.executor import (CSFArrays, dense_oracle, execute_plan,
+                                 plan_from_dict, plan_from_json,
+                                 plan_to_dict, plan_to_json,
+                                 reference_execute)
+from repro.core.planner import plan
+from repro.kernels.codegen import (PallasPlanExecutor, accumulator_type,
+                                   fusible_chains)
+from repro.sparse import build_csf, random_sparse
+from repro.sparse.coo import from_coords
+
+
+def _factors(spec, rng, dtype=np.float32):
+    return {t.name: rng.standard_normal(
+        [spec.dims[i] for i in t.indices]).astype(dtype)
+        for t in spec.inputs if not t.is_sparse}
+
+
+# --------------------------------------------------------------------- #
+# (a) one kernel for the whole chain, exact semantics
+# --------------------------------------------------------------------- #
+def test_mttkrp_chain_runs_as_single_kernel():
+    """Acceptance bar: MTTKRP's two reducing terms execute as a single
+    pallas_call — the stage-strategy record holds exactly one entry, the
+    fused chain's (leaf level, final out level) — with 1e-5 parity."""
+    spec = S.mttkrp(6, 7, 8, 4)
+    csf = build_csf(random_sparse((6, 7, 8), 0.3, seed=3))
+    rng = np.random.default_rng(1)
+    factors = _factors(spec, rng)
+    arrays = CSFArrays.from_csf(csf)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+
+    chains = fusible_chains(spec, p.path)
+    assert chains == {0: (0, 1)}          # leaf->2 feeding 2->1
+
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8,
+                            interpret=True, strategy="fused")
+    out = np.asarray(ex(arrays, factors))
+    # ONE kernel launch for both reducing terms: a single strategy entry
+    # keyed by the chain's (innermost lvl, final out_lvl), marked fused
+    assert ex.stage_strategy == {(3, 1): "fused"}
+    ref = reference_execute(spec, p.path, p.order, csf, factors)
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+    np.testing.assert_allclose(out, dense_oracle(spec, csf, factors),
+                               atol=1e-5)
+
+    # the staged lowering of the same plan launches one kernel per term
+    staged = PallasPlanExecutor(spec, p.path, p.order, block=8,
+                                interpret=True, strategy="auto")
+    np.testing.assert_allclose(np.asarray(staged(arrays, factors)), ref,
+                               atol=1e-5)
+    assert len(staged.stage_strategy) == 2
+    assert set(staged.stage_strategy) == {(3, 2), (2, 1)}
+
+
+def test_three_level_chain_single_kernel():
+    """Order-4 TTMc chains leaf→1 through two intermediate levels: two
+    VMEM scratch buffers, still one kernel."""
+    spec = S.ttmc4(4, 5, 6, 7, 3, 2, 2)
+    csf = build_csf(random_sparse((4, 5, 6, 7), 0.2, seed=5))
+    rng = np.random.default_rng(2)
+    factors = _factors(spec, rng)
+    arrays = CSFArrays.from_csf(csf)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    chains = fusible_chains(spec, p.path)
+    assert any(len(tids) == 3 for tids in chains.values())
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8,
+                            interpret=True, strategy="fused")
+    out = np.asarray(ex(arrays, factors))
+    assert list(ex.stage_strategy.values()).count("fused") == 1
+    ref = reference_execute(spec, p.path, p.order, csf, factors)
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+def test_fused_chain_under_jit_and_blocks():
+    spec = S.mttkrp(12, 10, 8, 5)
+    csf = build_csf(random_sparse((12, 10, 8), 0.15, seed=9))
+    rng = np.random.default_rng(3)
+    factors = {k: jnp.asarray(v) for k, v in _factors(spec, rng).items()}
+    arrays = CSFArrays.from_csf(csf)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ref = reference_execute(spec, p.path, p.order, csf,
+                            {k: np.asarray(v) for k, v in factors.items()})
+    for block in (4, 8, 16):
+        ex = PallasPlanExecutor(spec, p.path, p.order, block=block,
+                                interpret=True, strategy="fused")
+        fn = jax.jit(lambda f, ex=ex: ex(arrays, f))
+        np.testing.assert_allclose(np.asarray(fn(factors)), ref, atol=1e-5,
+                                   err_msg=f"block={block}")
+        np.testing.assert_allclose(np.asarray(fn(factors)),
+                                   np.asarray(fn(factors)))
+
+
+# --------------------------------------------------------------------- #
+# (b) chain detection: what fuses and what declines
+# --------------------------------------------------------------------- #
+def test_chain_detection_declines_unsafe_shapes():
+    # TTTP: the final term keeps the leaf level (product, not reducing)
+    spec = S.tttp3(6, 7, 8, 4)
+    p = plan(spec)
+    assert fusible_chains(spec, p.path) == {}
+    # SDDMM: a single reducing term — nothing to chain
+    spec = S.sddmm(6, 7, 4)
+    p = plan(spec)
+    assert fusible_chains(spec, p.path) == {}
+    # non-consecutive consumer: (B.C) dense pre-contraction first, then
+    # one sparse term — no reducing chain of length >= 2
+    spec = S.mttkrp(6, 7, 8, 4)
+    from repro.core.paths import enumerate_paths
+    for path in enumerate_paths(spec):
+        names = [t.lhs.name + "." + t.rhs.name for t in path]
+        if names[0] == "B.C":
+            assert fusible_chains(spec, path) == {}
+            break
+    else:                                   # pragma: no cover
+        pytest.fail("no B.C-first path enumerated")
+
+
+def test_fused_strategy_falls_back_on_declined_plans():
+    """strategy='fused' on a plan with no fusible chain must execute the
+    staged path unchanged (no fused entries, correct result)."""
+    spec = S.tttp3(6, 7, 8, 4)
+    csf = build_csf(random_sparse((6, 7, 8), 0.3, seed=3))
+    rng = np.random.default_rng(4)
+    factors = _factors(spec, rng)
+    arrays = CSFArrays.from_csf(csf)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8,
+                            interpret=True, strategy="fused")
+    out = np.asarray(ex(arrays, factors))
+    assert "fused" not in ex.stage_strategy.values()
+    dense = np.zeros([spec.dims[i] for i in spec.output.indices])
+    dense[tuple(csf.coo.coords.T)] = out
+    ref = reference_execute(spec, p.path, p.order, csf, factors)
+    np.testing.assert_allclose(dense, ref, atol=1e-5)
+
+
+def test_unknown_strategy_still_rejected():
+    spec = S.mttkrp(6, 7, 8, 4)
+    p = plan(spec)
+    with pytest.raises(ValueError, match="unknown strategy"):
+        PallasPlanExecutor(spec, p.path, p.order, strategy="unfused")
+
+
+# --------------------------------------------------------------------- #
+# (c) fusion as an autotuning axis + plan JSON v4
+# --------------------------------------------------------------------- #
+def test_candidates_expand_fusion_axis_for_pallas_only():
+    spec = S.mttkrp(16, 12, 10, 4)
+    csf = build_csf(random_sparse((16, 12, 10), 0.1, seed=3))
+    cands = generate_candidates(spec, nnz_levels=csf.nnz_levels(),
+                                max_paths=2, max_candidates=3,
+                                orders_per_path=1,
+                                backends=("xla", "pallas"))
+    assert len({c.key for c in cands}) == len(cands)
+    assert not any(c.fused for c in cands if c.backend == "xla")
+    pall = [c for c in cands if c.backend == "pallas"]
+    chained = [c for c in pall if fusible_chains(spec, c.path)]
+    assert chained and any(c.fused for c in chained)
+    # every fusible pallas schedule is measured both ways
+    for c in chained:
+        twin = dataclasses.replace(c, fused=not c.fused)
+        assert twin.key in {x.key for x in chained}
+
+
+def test_fused_winner_persists_and_replays(tmp_path):
+    """Force the fused lowering to win (it is the only candidate), then
+    check JSON v4 round-trip, cache hit, and execute_plan routing."""
+    spec = S.mttkrp(16, 12, 10, 4)
+    csf = build_csf(random_sparse((16, 12, 10), 0.1, seed=3))
+    rng = np.random.default_rng(0)
+    factors = {k: jnp.asarray(v) for k, v in _factors(spec, rng).items()}
+    forced = TunerConfig(max_paths=2, max_candidates=1, orders_per_path=1,
+                         warmup=1, repeats=2, backends=("pallas",))
+    tuned, stats = tune(spec, csf=csf, factors=factors,
+                        cache_dir=str(tmp_path), config=forced)
+    assert tuned.backend == "pallas"
+    assert stats.candidates_timed == 2      # staged + fused, both measured
+
+    fused_plan = dataclasses.replace(tuned, fused=True)
+    doc = plan_to_dict(fused_plan)
+    assert doc["version"] == 4 and doc["fused"] is True
+    rt = plan_from_json(plan_to_json(fused_plan))
+    assert rt == fused_plan and rt.fused
+
+    # execute_plan routes a fused plan through the chain lowering
+    out = execute_plan(fused_plan, CSFArrays.from_csf(csf), factors,
+                       block=8, interpret=True)
+    oracle = dense_oracle(spec, csf,
+                          {k: np.asarray(v) for k, v in factors.items()})
+    np.testing.assert_allclose(np.asarray(out), oracle, atol=1e-4)
+
+    # second search is a cache hit returning the same (possibly fused)
+    # winner — the fusion flag survives the disk round trip
+    tuned2, stats2 = tune(spec, csf=csf, factors=factors,
+                          cache_dir=str(tmp_path), config=forced)
+    assert stats2.cache_hit and tuned2 == tuned
+    assert tuned2.fused == tuned.fused
+
+
+def test_plan_json_v3_rejected():
+    doc = plan_to_dict(plan(S.mttkrp(8, 6, 5, 3)))
+    with pytest.raises(ValueError, match="unsupported plan version"):
+        plan_from_dict(dict(doc, version=3))
+
+
+# --------------------------------------------------------------------- #
+# (d1) satellite: accumulator dtype derived from the stage dtype
+# --------------------------------------------------------------------- #
+@pytest.fixture
+def x64():
+    jax.config.update("jax_enable_x64", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_accumulator_type_widens_never_narrows():
+    assert accumulator_type(jnp.float32) == jnp.float32
+    assert accumulator_type(jnp.bfloat16) == jnp.float32
+    assert accumulator_type(np.float64) == np.float64
+
+
+@pytest.mark.parametrize("strategy", ["row", "segsum", "fused"])
+def test_float64_operands_accumulate_at_float64(x64, strategy):
+    """Regression: the stage einsums hard-coded
+    preferred_element_type=float32, so float64 operands silently lost
+    half their mantissa.  With the accumulator derived from the stage
+    dtype the generated kernels must match the float64 numpy oracle to
+    machine precision — a float32 accumulation would sit at ~1e-7."""
+    spec = S.mttkrp(10, 8, 6, 4)
+    coo = random_sparse((10, 8, 6), 0.25, seed=7)
+    coo = from_coords(coo.coords, coo.values.astype(np.float64), coo.shape)
+    csf = build_csf(coo)
+    rng = np.random.default_rng(2)
+    factors = _factors(spec, rng, dtype=np.float64)
+    arrays = CSFArrays.from_csf(csf)
+    assert arrays.values.dtype == jnp.float64
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8,
+                            interpret=True, strategy=strategy)
+    out = np.asarray(ex(arrays, factors))
+    assert out.dtype == np.float64
+    oracle = dense_oracle(spec, csf, factors)
+    np.testing.assert_allclose(out, oracle, atol=1e-12, rtol=1e-12)
+
+
+# --------------------------------------------------------------------- #
+# (d2) satellite: pruned measurements never win the search
+# --------------------------------------------------------------------- #
+def test_pruned_candidate_never_wins(monkeypatch):
+    """Regression: measure_candidates used to sort pruned single-sample
+    entries into the same list as full medians; a pruned entry tying the
+    best median could be returned as the winner.  The tuner must skip
+    pruned entries explicitly and account for them in SearchStats."""
+    import repro.autotune.tuner as tuner_mod
+    spec = S.mttkrp(8, 6, 5, 3)
+    csf = build_csf(random_sparse((8, 6, 5), 0.2, seed=1))
+
+    captured = {}
+
+    def fake_measure(spec_, candidates, arrays, factors, config=None,
+                     stats=None):
+        full = Candidate(path=candidates[0].path, order=candidates[0].order,
+                         cost=0.0, flops=0.0, backend="xla")
+        pruned = Candidate(path=candidates[-1].path,
+                           order=candidates[-1].order,
+                           cost=1.0, flops=1.0, backend="xla")
+        if stats is not None:
+            stats.candidates_timed = 2
+            stats.pruned = 1
+        captured["full"] = full
+        # the pruned single-sample entry TIES the best median — under the
+        # old ascending-seconds sort it came first and won the search
+        return [Measurement(pruned, 1e-3, pruned=True),
+                Measurement(full, 1e-3)]
+
+    monkeypatch.setattr(tuner_mod, "measure_candidates", fake_measure)
+    tuned, stats = tune(spec, csf=csf,
+                        config=TunerConfig(max_paths=2, max_candidates=2,
+                                           orders_per_path=1))
+    assert (tuned.path, tuned.order) == (captured["full"].path,
+                                         captured["full"].order)
+    assert stats.pruned == 1
+    assert stats.best_seconds == 1e-3
+
+
+def test_measure_sorts_pruned_last_and_counts_them():
+    """With a sub-1 prune ratio every candidate after the first is
+    abandoned on its first call (first > ratio*best always holds), so
+    the fully-measured head candidate must come out first regardless of
+    the pruned entries' single-sample times."""
+    from repro.autotune.measure import MeasureConfig, measure_candidates
+    from repro.autotune.tuner import SearchStats
+    spec = S.mttkrp(8, 6, 5, 3)
+    csf = build_csf(random_sparse((8, 6, 5), 0.2, seed=1))
+    arrays = CSFArrays.from_csf(csf)
+    rng = np.random.default_rng(0)
+    factors = {k: jnp.asarray(v) for k, v in _factors(spec, rng).items()}
+    cands = generate_candidates(spec, nnz_levels=csf.nnz_levels(),
+                                max_paths=3, max_candidates=3,
+                                orders_per_path=1)
+    assert len(cands) >= 2
+    stats = SearchStats()
+    ms = measure_candidates(spec, cands, arrays, factors,
+                            config=MeasureConfig(warmup=1, repeats=2,
+                                                 prune_ratio=1e-9),
+                            stats=stats)
+    assert not ms[0].pruned
+    assert ms[0].candidate.key == cands[0].key
+    assert stats.pruned == len(cands) - 1
+    assert [m.pruned for m in ms] == [False] + [True] * (len(cands) - 1)
+
+
+# --------------------------------------------------------------------- #
+# (d3) satellite: stale-but-parseable cache entries are a clean miss
+# --------------------------------------------------------------------- #
+def test_cache_version_guard_rejects_doctored_v3_entry(tmp_path):
+    """A v3-era entry restored under a current key name must be an
+    explicit miss (version guard), not a downstream schema error — and
+    the next put overwrites it."""
+    cache = PlanCache(str(tmp_path))
+    p = plan(S.mttkrp(8, 6, 5, 3))
+    path = cache.put("k", p)
+    assert cache.get("k") == p
+
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["cache_version"] == CACHE_VERSION == 4
+    # doctor the entry back to the v3 era: stale stamp, v3 plan schema
+    doc["cache_version"] = 3
+    doc["plan"]["version"] = 3
+    doc["plan"].pop("fused", None)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    assert cache.get("k") is None           # clean miss, no exception
+
+    # an entry missing the stamp entirely (pre-guard writer) also misses
+    doc.pop("cache_version")
+    doc["plan"]["version"] = 4
+    doc["plan"]["fused"] = False
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    assert cache.get("k") is None
+
+    # the next search's put restores service
+    cache.put("k", p)
+    assert cache.get("k") == p
