@@ -9,7 +9,10 @@ pallas backend reports both lowerings of the same plan: staged (one
 kernel per reducing term, intermediate through HBM) and fused (the
 single-kernel chain of DESIGN.md §6 — both reducing terms in one
 pallas_call with a VMEM scratch crossing buffer); plans the fuser
-declines get no fused row rather than a mislabeled staged one."""
+declines get no fused row rather than a mislabeled staged one.  A
+``-b256`` row reruns the staged pallas plan at a non-default point of
+the autotuner's block grid (DESIGN.md §8), so the block axis is visible
+in the perf trajectory."""
 from __future__ import annotations
 
 import numpy as np
@@ -73,6 +76,14 @@ def run(scale: float = 1.0, R: int = 64, cache_dir: str | None = None):
         pex = make_executor(spec, pl_.path, pl_.order, backend="pallas")
         pallas_fn = jax.jit(lambda f: pex(arrays, f))
         t_pal = timeit(pallas_fn, factors)
+        # the block knob (DESIGN.md §8): same plan, one non-default point
+        # of the autotuner's block grid, so the axis shows up in the perf
+        # trajectory (interpret mode: a TPU-target shape row, not a CPU
+        # perf claim)
+        bex = make_executor(spec, pl_.path, pl_.order, backend="pallas",
+                            block=256)
+        block_fn = jax.jit(lambda f: bex(arrays, f))
+        t_blk = timeit(block_fn, factors)
         from repro.kernels.codegen import fusible_chains
         fused_pallas_fn = None
         if fusible_chains(spec, pl_.path):
@@ -90,6 +101,8 @@ def run(scale: float = 1.0, R: int = 64, cache_dir: str | None = None):
                      round(t_fus * 1e6, 1), round(t_unf / t_fus, 2)))
         rows.append(("mttkrp", name, "spttn-planned-pallas",
                      round(t_pal * 1e6, 1), round(t_unf / t_pal, 2)))
+        rows.append(("mttkrp", name, "spttn-planned-pallas-b256",
+                     round(t_blk * 1e6, 1), round(t_unf / t_blk, 2)))
         if fused_pallas_fn is not None:
             rows.append(("mttkrp", name, "spttn-planned-pallas-fused",
                          round(t_fpal * 1e6, 1), round(t_unf / t_fpal, 2)))
@@ -102,6 +115,8 @@ def run(scale: float = 1.0, R: int = 64, cache_dir: str | None = None):
         c = np.asarray(pallas_fn(factors))
         assert np.allclose(a, b, atol=1e-2 * max(1.0, np.abs(a).max()))
         assert np.allclose(a, c, atol=1e-2 * max(1.0, np.abs(a).max()))
+        e = np.asarray(block_fn(factors))
+        assert np.allclose(a, e, atol=1e-2 * max(1.0, np.abs(a).max()))
         if fused_pallas_fn is not None:
             d = np.asarray(fused_pallas_fn(factors))
             assert np.allclose(a, d,

@@ -59,7 +59,15 @@ def compare(base: dict, new: dict, threshold: float) -> int:
     for suite, key, old, us, ratio in regressions:
         print(f"REGRESSION {suite}/{key}: {old:.1f}us -> {us:.1f}us "
               f"({ratio:.2f}x > {threshold:g}x)")
-    return 1 if regressions else 0
+    if regressions:
+        # the one-line verdict CI surfaces: name every offending row so
+        # the failure is actionable without scrolling the log
+        rows = ", ".join(f"{s}/{k} ({r:.2f}x)"
+                         for s, k, _, _, r in regressions)
+        print(f"FAIL: {len(regressions)} benchmark regression(s) over "
+              f"{threshold:g}x: {rows}", file=sys.stderr)
+        return 1
+    return 0
 
 
 def main() -> int:

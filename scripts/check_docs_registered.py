@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Docs-registration lint for the CI docs lane.
+
+Every markdown file under ``docs/`` must be registered in
+``tests/test_docs.py``'s ``MARKDOWN_WITH_DOCTESTS`` list.  That list is
+what makes a doc *gated*: its ``>>>`` examples execute in tier-1 and in
+the CI docs lane, and the same test module drives the intra-repo link
+checker (``scripts/check_doc_links.py``) over it.  A doc added without
+registration would silently rot — its examples never run and a lost
+example is never noticed — so this script fails the build instead.
+
+The registry is read syntactically (no test imports needed), so the
+lint runs before dependencies are installed.
+
+Usage:
+  python scripts/check_docs_registered.py [root]    # default: repo root
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+REGISTRY_FILE = os.path.join("tests", "test_docs.py")
+REGISTRY_NAME = "MARKDOWN_WITH_DOCTESTS"
+
+
+def registered_docs(root: str) -> list[str]:
+    """Repo-relative paths listed in the doctest registry.
+
+    The registry is parsed with ``ast`` rather than a regex so that a
+    commented-out entry really counts as unregistered — the lint's whole
+    job is to notice docs whose examples stopped running."""
+    path = os.path.join(root, REGISTRY_FILE)
+    with open(path, encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=path)
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == REGISTRY_NAME
+                for t in node.targets):
+            value = ast.literal_eval(node.value)
+            if (not isinstance(value, list)
+                    or not all(isinstance(x, str) for x in value)):
+                raise ValueError(
+                    f"{REGISTRY_NAME} must be a list of string paths")
+            return value
+    raise ValueError(f"{REGISTRY_FILE} lost its {REGISTRY_NAME} list")
+
+
+def docs_on_disk(root: str) -> list[str]:
+    docs_dir = os.path.join(root, "docs")
+    if not os.path.isdir(docs_dir):
+        return []
+    return sorted(
+        os.path.join("docs", f) for f in os.listdir(docs_dir)
+        if f.endswith(".md"))
+
+
+def main(argv: list[str]) -> int:
+    root = os.path.abspath(argv[1]) if len(argv) > 1 else os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))
+    registered = set(registered_docs(root))
+    on_disk = docs_on_disk(root)
+    missing = [d for d in on_disk if d not in registered]
+    # a registered doc that no longer exists is equally a rot signal
+    gone = [d for d in sorted(registered)
+            if d.startswith("docs/")
+            and not os.path.exists(os.path.join(root, d))]
+    for d in missing:
+        print(f"UNREGISTERED DOC {d}: add it to {REGISTRY_NAME} in "
+              f"{REGISTRY_FILE} so its examples are gated")
+    for d in gone:
+        print(f"STALE REGISTRATION {d}: listed in {REGISTRY_NAME} but "
+              "missing on disk")
+    print(f"checked {len(on_disk)} docs/*.md against {REGISTRY_NAME}: "
+          f"{len(missing)} unregistered, {len(gone)} stale")
+    return 1 if (missing or gone) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

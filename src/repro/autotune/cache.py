@@ -40,9 +40,11 @@ from repro.core.spec import SpTTNSpec
 # DESIGN.md §7) and plans carry the mesh/shard fields (PLAN_JSON_VERSION
 # 3).  v4: the Pallas fusion axis — plans carry ``fused`` (PLAN_JSON_VERSION
 # 4) and entries stamp ``cache_version`` so a stale-but-parseable file is
-# an explicit miss, not a downstream schema error.  Older entries
+# an explicit miss, not a downstream schema error.  v5: the Pallas block
+# axis (DESIGN.md §8) — the key gains a ``blocks`` grid component and
+# plans carry the winner's ``block`` (PLAN_JSON_VERSION 5).  Older entries
 # deserialize to a different schema and must be unmatched, never read.
-CACHE_VERSION = 4
+CACHE_VERSION = 5
 
 
 def spec_signature(spec: SpTTNSpec) -> str:
@@ -65,7 +67,8 @@ def cache_key(spec: SpTTNSpec,
               nnz_levels: Mapping[int, int],
               device: str | None = None,
               backends: tuple[str, ...] = ("xla",),
-              mesh: Mapping | None = None) -> str:
+              mesh: Mapping | None = None,
+              blocks: tuple[int, ...] | None = None) -> str:
     """``backends`` is the tuner's engine search axis: a plan tuned under
     a forced/narrower axis (e.g. ``("pallas",)``) must never be served to
     a search over a different axis, so the axis is part of the key.
@@ -79,6 +82,12 @@ def cache_key(spec: SpTTNSpec,
     tuned for a different mesh axis), even when the local nnz profile
     happens to coincide.
 
+    ``blocks`` is the Pallas block-size grid swept by the search
+    (DESIGN.md §8) — the same narrowing rule as ``backends``: a winner
+    found over one grid must never be served to a search over another.
+    ``None`` (the default single-point grid) hashes distinctly from any
+    explicit grid.
+
     >>> from repro.core import spec as S
     >>> spec = S.mttkrp(8, 6, 5, 4)
     >>> levels = {0: 1, 1: 8, 2: 20, 3: 40}
@@ -87,6 +96,8 @@ def cache_key(spec: SpTTNSpec,
     ...                    mesh={"mesh_shape": {"data": 4},
     ...                          "mode_axis": {"0": "data"}, "shard": 0})
     >>> single == shard0
+    False
+    >>> single == cache_key(spec, levels, "cpu:x", blocks=(128, 256))
     False
     >>> len(single)
     64
@@ -99,6 +110,7 @@ def cache_key(spec: SpTTNSpec,
         "device": device if device is not None else device_kind(),
         "backends": list(backends),
         "mesh": None if mesh is None else dict(mesh),
+        "blocks": None if blocks is None else [int(b) for b in blocks],
     }
     blob = json.dumps(doc, sort_keys=True).encode()
     return hashlib.sha256(blob).hexdigest()

@@ -32,7 +32,11 @@ class Candidate:
     ``fused`` is the Pallas backend's second axis (DESIGN.md §6): run
     detected reducing chains as one multi-level kernel (True) or as
     staged per-term kernels (False); it is only expanded for schedules
-    whose path actually contains a provably fusible chain.
+    whose path actually contains a provably fusible chain.  ``block`` is
+    the Pallas backend's third axis (DESIGN.md §8): the fiber block size
+    of every generated stage — a swept value is always a positive
+    multiple of 8 (the TPU sublane tile); 0 means "engine default" and
+    is what non-Pallas candidates carry.
     """
 
     path: ContractionPath
@@ -41,13 +45,15 @@ class Candidate:
     flops: float         # sparse-aware FLOP model (path-dependent)
     backend: str = "xla"
     fused: bool = False
+    block: int = 0       # 0 = engine default (non-Pallas candidates)
 
     @property
     def key(self) -> str:
         terms = "|".join(str(t) for t in self.path)
         orders = ";".join(",".join(a) for a in self.order)
         fz = "+fused" if self.fused else ""
-        return f"{terms}#{orders}@{self.backend}{fz}"
+        blk = f"%b{self.block}" if self.block else ""
+        return f"{terms}#{orders}@{self.backend}{fz}{blk}"
 
 
 def default_nnz_levels(spec: SpTTNSpec) -> dict[int, int]:
@@ -68,7 +74,8 @@ def generate_candidates(spec: SpTTNSpec,
                         depth_slack: int = 0,
                         max_candidates: int = 8,
                         orders_per_path: int = 3,
-                        backends: Sequence[str] = ("xla",)
+                        backends: Sequence[str] = ("xla",),
+                        blocks: Sequence[int] | None = None
                         ) -> list[Candidate]:
     """Generate the model-pruned candidate set, best-ranked first.
 
@@ -86,7 +93,23 @@ def generate_candidates(spec: SpTTNSpec,
     (``fusible_chains``) are additionally expanded across the ``fused``
     axis, so the staged and single-kernel chain lowerings compete on
     wall clock.
+
+    ``blocks`` is the Pallas block-size grid (DESIGN.md §8): every
+    pallas candidate is expanded once per grid value, so the fiber block
+    size competes on wall clock like any other axis and the winner's
+    block persists with the plan.  Entries must be positive multiples of
+    8 (the TPU sublane tile — the pad-to-tile pass guarantees lane
+    alignment but cannot repair a misaligned sublane count without
+    silently changing the schedule being measured).  ``None`` means the
+    single-point grid ``(DEFAULT_BLOCK,)``.
     """
+    from repro.kernels.codegen.executor import DEFAULT_BLOCK
+    blocks = tuple(blocks) if blocks else (DEFAULT_BLOCK,)
+    bad_blocks = [b for b in blocks
+                  if not isinstance(b, int) or b <= 0 or b % 8]
+    if bad_blocks:
+        raise ValueError(
+            f"block sizes must be positive multiples of 8, got {bad_blocks}")
     cost = cost or ConstrainedBlas(bound=2)
     nnz_levels = dict(nnz_levels) if nnz_levels else default_nnz_levels(spec)
     sp = spec.sparse_indices
@@ -126,7 +149,8 @@ def generate_candidates(spec: SpTTNSpec,
                 spec, cost=MaxBufferSize(), nnz_levels=nnz_levels,
                 max_paths=max_paths, depth_slack=depth_slack,
                 max_candidates=max_candidates,
-                orders_per_path=orders_per_path, backends=backends)
+                orders_per_path=orders_per_path, backends=backends,
+                blocks=blocks)
         raise ValueError(f"no feasible loop nest found for {spec}")
 
     out.sort(key=lambda c: (c.cost, c.flops, path_depth(c.path)))
@@ -147,10 +171,14 @@ def generate_candidates(spec: SpTTNSpec,
             if b == "pallas" and fusible_chains(spec, c.path):
                 # fusion axis: staged AND single-kernel chain lowering
                 variants = (False, True)
+            # block axis: only the Pallas engine consumes a block size
+            blks = blocks if b == "pallas" else (0,)
             for fz in variants:
-                cand = dataclasses.replace(c, backend=b, fused=fz)
-                if cand.key in seen_keys:
-                    continue
-                seen_keys.add(cand.key)
-                expanded.append(cand)
+                for blk in blks:
+                    cand = dataclasses.replace(c, backend=b, fused=fz,
+                                               block=blk)
+                    if cand.key in seen_keys:
+                        continue
+                    seen_keys.add(cand.key)
+                    expanded.append(cand)
     return expanded

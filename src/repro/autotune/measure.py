@@ -88,11 +88,13 @@ def measure_candidates(spec: SpTTNSpec,
         return time.perf_counter() - t0
 
     for cand in candidates:
+        backend = getattr(cand, "backend", "xla")
         kwargs = {}
         if getattr(cand, "fused", False):
             kwargs["strategy"] = "fused"   # single-kernel chain lowering
-        ex = make_executor(spec, cand.path, cand.order,
-                           backend=getattr(cand, "backend", "xla"),
+        if backend == "pallas" and getattr(cand, "block", 0):
+            kwargs["block"] = cand.block   # swept block axis (DESIGN.md §8)
+        ex = make_executor(spec, cand.path, cand.order, backend=backend,
                            **kwargs)
         fn = jax.jit(lambda f, ex=ex: ex(arrays, f))
         for _ in range(config.warmup):

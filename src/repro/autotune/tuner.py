@@ -42,6 +42,14 @@ class TunerConfig:
     plan-cache key — a sharded pattern never reuses a single-device
     winner — and is stamped onto the tuned plan, which persists it in
     plan JSON v3.
+
+    ``blocks`` is the Pallas block-size grid (DESIGN.md §8): every
+    pallas candidate is measured once per grid value (positive multiples
+    of 8 — the TPU sublane tile), the winner's block is stamped onto the
+    plan, and it persists in plan JSON v5 so replay compiles the exact
+    kernels that won.  ``None`` means the single-point default grid
+    ``(DEFAULT_BLOCK,)`` — block sweeping costs measurements, so opting
+    into a wider grid is explicit, like forcing a backend axis.
     """
 
     max_paths: int | None = 16
@@ -55,6 +63,7 @@ class TunerConfig:
     synth_seed: int = 0
     backends: tuple[str, ...] | None = None
     mesh: Mapping | None = None
+    blocks: tuple[int, ...] | None = None
 
 
 def default_backends() -> tuple[str, ...]:
@@ -130,7 +139,7 @@ def tune(spec: SpTTNSpec,
     backends = config.backends or default_backends()
     cache = PlanCache(cache_dir) if cache_dir else None
     key = cache_key(spec, levels, device_kind(), backends=backends,
-                    mesh=config.mesh)
+                    mesh=config.mesh, blocks=config.blocks)
     stats.cache_key = key
     if cache is not None:
         hit = cache.get(key)
@@ -149,7 +158,7 @@ def tune(spec: SpTTNSpec,
         depth_slack=config.depth_slack,
         max_candidates=config.max_candidates,
         orders_per_path=config.orders_per_path,
-        backends=backends)
+        backends=backends, blocks=config.blocks)
     model_cand = candidates[0]
     stats.candidates_generated = len(candidates)
 
@@ -182,7 +191,9 @@ def tune(spec: SpTTNSpec,
                      depth=path_depth(best.candidate.path),
                      backend=best.candidate.backend,
                      mesh=None if config.mesh is None else dict(config.mesh),
-                     fused=best.candidate.fused)
+                     fused=best.candidate.fused,
+                     block=(best.candidate.block or None)
+                     if best.candidate.backend == "pallas" else None)
 
     if cache is not None:
         cache.put(key, plan, meta={
@@ -197,7 +208,8 @@ def tune(spec: SpTTNSpec,
                 {"seconds": m.seconds, "pruned": m.pruned,
                  "cost": m.candidate.cost, "flops": m.candidate.flops,
                  "backend": m.candidate.backend,
-                 "fused": m.candidate.fused}
+                 "fused": m.candidate.fused,
+                 "block": m.candidate.block}
                 for m in results],
         })
 

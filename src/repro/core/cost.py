@@ -14,6 +14,44 @@ Cost instances implemented:
   * :class:`ConstrainedBlas` — the metric used in the paper's experiments
     (§5/§7): maximize the number of innermost independent dense (BLAS-able)
     loops subject to a bound on intermediate buffer dimension.
+
+Every cost scores the same object — a contraction path plus a loop
+order — on the MTTKRP running example (docs/cost-models.md walks
+through these numbers):
+
+>>> from repro.core import spec as S
+>>> from repro.core.cost import (CacheMisses, ConstrainedBlas,
+...                              MaxBufferDim, MaxBufferSize)
+>>> from repro.core.order_dp import optimal_order
+>>> from repro.core.planner import plan
+>>> spec = S.mttkrp(8, 6, 5, 4)   # A(i,a) = sum_jk T(i,j,k) B(j,a) C(k,a)
+>>> path = plan(spec).path        # leaf term T.C, then root term B.(T.C)
+>>> [str(t) for t in path]
+['T*(i,j,k) . C(k,a) -> (T.C)*(i,j,a)', 'B(j,a) . (T.C)*(i,j,a) -> OUT(i,a)']
+
+The fully fused nest keeps the crossing buffer scalar (one element), so
+the Def-4.7 optima are tiny:
+
+>>> order, best = optimal_order(path, MaxBufferSize(), spec.dims,
+...                             spec.sparse_indices)
+>>> order
+(('i', 'j', 'a', 'k'), ('i', 'j', 'a'))
+>>> best
+1
+>>> MaxBufferDim().evaluate(path, order, spec.dims, spec.sparse_indices)
+0
+
+The paper's experiment metric trades that for MXU-offloadable loops: the
+best order ends both terms in the dense index ``a`` (two BLAS-able
+loops, hence cost −2 under minimization), at a buffer dimension still
+within the bound:
+
+>>> order, best = optimal_order(path, ConstrainedBlas(bound=2), spec.dims,
+...                             spec.sparse_indices)
+>>> (order, best)
+((('i', 'j', 'k', 'a'), ('i', 'j', 'a')), -2.0)
+>>> optimal_order(path, CacheMisses(), spec.dims, spec.sparse_indices)[1]
+272.0
 """
 from __future__ import annotations
 

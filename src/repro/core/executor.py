@@ -47,12 +47,14 @@ BACKENDS = ("reference", "xla", "pallas")
 # Plan serialization (DESIGN.md §4) — plans are pattern-static, so a chosen
 # schedule survives process restarts via the autotuner's disk cache.
 # Version 2 added the ``backend`` field; version 3 added the ``mesh``
-# shard-context field (DESIGN.md §7); version 4 adds the ``fused`` flag
-# (single-kernel chain lowering on the Pallas backend, DESIGN.md §6).
+# shard-context field (DESIGN.md §7); version 4 added the ``fused`` flag
+# (single-kernel chain lowering on the Pallas backend, DESIGN.md §6);
+# version 5 adds the ``block`` field (the tuned Pallas fiber block size,
+# DESIGN.md §8 — ``null`` means engine default / non-Pallas backend).
 # Any other version is rejected — the forward/backward-compat rule is
 # "re-plan, never guess".
 # =========================================================================== #
-PLAN_JSON_VERSION = 4
+PLAN_JSON_VERSION = 5
 
 
 def _operand_to_dict(op) -> dict:
@@ -88,6 +90,7 @@ def plan_to_dict(plan) -> dict:
         "backend": plan.backend,
         "mesh": None if plan.mesh is None else dict(plan.mesh),
         "fused": bool(plan.fused),
+        "block": None if plan.block is None else int(plan.block),
     }
 
 
@@ -115,9 +118,18 @@ def plan_from_dict(doc: dict):
     fused = doc.get("fused", False)
     if not isinstance(fused, bool):
         raise ValueError(f"plan fused must be a boolean, got {fused!r}")
+    block = doc.get("block")
+    if block is not None and (not isinstance(block, int)
+                              or isinstance(block, bool) or block < 1
+                              or block % 8):
+        # the sweep only ever emits sublane-aligned blocks (DESIGN.md §8);
+        # accepting a misaligned one here would let compiled-mode replay
+        # silently round it — rejected, never coerced
+        raise ValueError("plan block must be a positive multiple of 8 "
+                         f"or null, got {block!r}")
     return SpTTNPlan(spec=spec, path=path, order=order, cost=doc["cost"],
                      flops=doc["flops"], depth=doc["depth"], backend=backend,
-                     mesh=mesh, fused=fused)
+                     mesh=mesh, fused=fused, block=block)
 
 
 def _tensor_ref(d):
@@ -744,6 +756,9 @@ def execute_plan(plan, csf, factors: Mapping, backend: str | None = None,
         # a fused-winner plan replays through the single-kernel chain
         # lowering it was tuned with (DESIGN.md §6)
         kwargs.setdefault("strategy", "fused")
+    if resolved == "pallas" and getattr(plan, "block", None):
+        # ... and with the exact fiber block size that won (DESIGN.md §8)
+        kwargs.setdefault("block", plan.block)
     ex = make_executor(plan.spec, plan.path, plan.order,
                        backend=resolved, **kwargs)
     return ex(csf, factors)

@@ -7,6 +7,30 @@ complexity is ``O(N^3 * 2^m * m)`` versus ``O((m!)^N)`` exhaustive
 (Theorem 4.9).  Returns both the best order A and the best order B whose
 loop-nest forest has a different root — B is required by line 17 of the
 pseudocode to preserve full fusion across peels.
+
+The DP scores any tree-separable cost (docs/cost-models.md); on the
+MTTKRP running example under :class:`~repro.core.cost.MaxBufferSize` it
+finds the fully fused nest whose crossing buffer is a single scalar, and
+its alternative-root order (line 17's ``B``) starts at a different loop:
+
+>>> from repro.core import spec as S
+>>> from repro.core.cost import MaxBufferSize
+>>> from repro.core.planner import plan
+>>> spec = S.mttkrp(8, 6, 5, 4)
+>>> path = plan(spec).path
+>>> res = OrderDP(path, MaxBufferSize(), spec.dims,
+...               spec.sparse_indices).solve()
+>>> res.order, res.cost
+((('i', 'j', 'a', 'k'), ('i', 'j', 'a')), 1)
+>>> res.alt_order[0][0] != res.order[0][0]
+True
+
+The sparse-order restriction (paper §5) is honored: within any term,
+CSF-stored indices may only be peeled in storage order, so no valid
+order ever iterates ``j`` before ``i`` inside the sparse leaf term:
+
+>>> all(a[0] == "i" for a, *_ in [res.order])   # root loop is storage-major
+True
 """
 from __future__ import annotations
 

@@ -35,9 +35,12 @@ class SpTTNPlan:
     §7.  ``fused`` records whether the schedule won with the Pallas
     backend's single-kernel chain lowering (DESIGN.md §6) — an
     autotuning axis since plan JSON v4; it is False for non-Pallas
-    backends.  ``stats`` is attached by autotuned planning (search/cache
-    accounting); it is excluded from equality so a cache round trip
-    compares identical.
+    backends.  ``block`` records the Pallas fiber block size the
+    schedule won with (DESIGN.md §8) — an autotuning axis since plan
+    JSON v5; ``None`` (non-Pallas backends, or a pre-sweep plan) means
+    the engine default.  ``stats`` is attached by autotuned planning
+    (search/cache accounting); it is excluded from equality so a cache
+    round trip compares identical.
     """
 
     spec: SpTTNSpec
@@ -49,6 +52,7 @@ class SpTTNPlan:
     backend: str = "xla"
     mesh: Mapping | None = None
     fused: bool = False
+    block: int | None = None
     stats: object | None = dataclasses.field(default=None, compare=False,
                                              repr=False)
 

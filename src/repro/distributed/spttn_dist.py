@@ -458,6 +458,11 @@ def make_distributed_tuned(spec: SpTTNSpec, coo: COOTensor, mesh: Mesh,
             # the shard's winner used the single-kernel chain lowering
             # (DESIGN.md §6); replay through the same strategy
             kw.setdefault("strategy", "fused")
+        if sh.plan.backend == "pallas" and getattr(sh.plan, "block", None):
+            # ... and with the shard's tuned fiber block size (DESIGN.md
+            # §8) — shards may win at different blocks on skewed
+            # partitions, so the knob is per shard, not per mesh
+            kw.setdefault("block", sh.plan.block)
         ex = make_executor(spec, sh.plan.path, sh.plan.order,
                            backend=sh.plan.backend, **kw)
         if sh.plan.backend == "reference":

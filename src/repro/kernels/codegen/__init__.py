@@ -9,8 +9,9 @@ from repro.kernels.codegen.executor import (DEFAULT_BLOCK,
                                             PallasPlanExecutor,
                                             SegmentProfile, fusible_chains,
                                             segment_profile)
-from repro.kernels.codegen.stages import (ChainLink, Stage, StageOperand,
-                                          accumulator_type,
+from repro.kernels.codegen.stages import (TILE_LANE, TILE_SUBLANE, ChainLink,
+                                          Stage, StageOperand,
+                                          accumulator_type, lane_pad,
                                           run_fused_chain_stage,
                                           run_product_stage,
                                           run_reduce_stage)
@@ -18,6 +19,7 @@ from repro.kernels.codegen.stages import (ChainLink, Stage, StageOperand,
 __all__ = [
     "DEFAULT_BLOCK", "PallasPlanExecutor", "SegmentProfile",
     "fusible_chains", "segment_profile", "ChainLink", "Stage",
-    "StageOperand", "accumulator_type", "run_fused_chain_stage",
-    "run_product_stage", "run_reduce_stage",
+    "StageOperand", "TILE_LANE", "TILE_SUBLANE", "accumulator_type",
+    "lane_pad", "run_fused_chain_stage", "run_product_stage",
+    "run_reduce_stage",
 ]

@@ -37,7 +37,8 @@ from repro.core.executor import (CSFArrays, VectorizedExecutor,
 from repro.core.loopnest import LoopOrder
 from repro.core.paths import ContractionPath, consumer_map
 from repro.core.spec import SpTTNSpec
-from repro.kernels.codegen.stages import (ChainLink, Stage, StageOperand,
+from repro.kernels.codegen.stages import (TILE_SUBLANE, ChainLink,
+                                          Stage, StageOperand,
                                           run_fused_chain_stage,
                                           run_product_stage,
                                           run_reduce_stage)
@@ -155,18 +156,40 @@ class PallasPlanExecutor(VectorizedExecutor):
     ``strategy`` forces the reduction lowering (``"row"``/``"segsum"``)
     for tests; ``"auto"`` picks per stage from the segment profile.
     ``interpret=None`` resolves to True off-TPU (CPU validation mode).
+
+    ``tile_align`` turns on the pad-to-tile lowering pass (DESIGN.md §8):
+    every stage's lane widths are padded to ``TILE_LANE`` (128) and
+    ``block`` is rounded up to a ``TILE_SUBLANE`` (8) multiple, which is
+    what makes the generated kernels legal under ``interpret=False`` on
+    real TPUs.  ``None`` resolves to compiled mode (``not interpret``) —
+    interpret-mode validation stays unpadded by default, but the pass is
+    value-preserving, so ``tile_align=True, interpret=True`` is the
+    CPU-testable witness for the compiled lowering.
     """
 
     def __init__(self, spec: SpTTNSpec, path: ContractionPath,
                  order: LoopOrder, block: int = DEFAULT_BLOCK,
-                 interpret: bool | None = None, strategy: str = "auto"):
+                 interpret: bool | None = None, strategy: str = "auto",
+                 tile_align: bool | None = None):
         super().__init__(spec, path, order)
         if strategy not in ("auto", "row", "segsum", "fused"):
             raise ValueError(f"unknown strategy {strategy!r}")
-        self.block = block
+        if block < 1:
+            raise ValueError(f"block must be positive, got {block}")
         self.interpret = default_interpret() if interpret is None \
             else interpret
+        self.tile_align = (not self.interpret) if tile_align is None \
+            else bool(tile_align)
+        self.block = round_up(block, TILE_SUBLANE) if self.tile_align \
+            else block
         self.strategy = strategy
+        # every Stage emitted at trace time, in emission order — the
+        # shape-inspection surface for the tile-alignment tests (a fused
+        # chain records (stage, links) in emitted_chains as well).  Reset
+        # per trace in __call__ so a long-lived executor reflects only
+        # its latest trace instead of accumulating every one.
+        self.emitted_stages: list[Stage] = []
+        self.emitted_chains: list[tuple[Stage, tuple[ChainLink, ...]]] = []
         # (lvl, out_lvl) -> "row" | "segsum" | "fused", recorded at trace
         # time for inspection (tests, distributed per-shard strategy
         # reporting).  A fused chain records ONE entry keyed by its
@@ -177,6 +200,12 @@ class PallasPlanExecutor(VectorizedExecutor):
         # executed as one kernel only under strategy="fused"
         self._chains = (fusible_chains(spec, path)
                         if strategy == "fused" else {})
+
+    def __call__(self, csf, factors):
+        self.emitted_stages.clear()
+        self.emitted_chains.clear()
+        self.stage_strategy.clear()
+        return super().__call__(csf, factors)
 
     # -- static layouts (pattern-fixed, cached on the CSFArrays) -------- #
     def _layout(self, csf: CSFArrays, lvl: int, out_lvl: int):
@@ -313,7 +342,8 @@ class PallasPlanExecutor(VectorizedExecutor):
             for arr, op in zip(arrays, operands)]
         stage = Stage(operands=tuple(operands), out_subs=out_subs,
                       out_shape=out_shape, reduce=True, block=self.block,
-                      nseg=lay.nseg, interpret=self.interpret)
+                      nseg=lay.nseg, interpret=self.interpret,
+                      tile=self.tile_align)
 
         links, link_arrays = [], []
         for pos, term in enumerate(terms[1:]):
@@ -340,6 +370,8 @@ class PallasPlanExecutor(VectorizedExecutor):
         out_lvl = levels[-1]
         nseg_out = csf.nfib[out_lvl] if out_lvl > 0 else 1
         dtype = jnp.result_type(dtype, *[a.dtype for a in link_arrays])
+        self.emitted_stages.append(stage)
+        self.emitted_chains.append((stage, tuple(links)))
         out2d = run_fused_chain_stage(stage, tuple(links), segs, firsts,
                                       lasts, mask, padded, link_arrays,
                                       nseg_out, dtype)
@@ -384,7 +416,9 @@ class PallasPlanExecutor(VectorizedExecutor):
                 for arr, op in zip(arrays, operands)]
             stage = Stage(operands=tuple(operands), out_subs=out_subs,
                           out_shape=oshape, reduce=True, block=self.block,
-                          nseg=lay.nseg, interpret=self.interpret)
+                          nseg=lay.nseg, interpret=self.interpret,
+                          tile=self.tile_align)
+            self.emitted_stages.append(stage)
             out2d = run_reduce_stage(stage, block_seg, block_first, mask,
                                      padded, dtype)
             arr = out2d.reshape((lay.nseg,) + oshape)
@@ -402,7 +436,9 @@ class PallasPlanExecutor(VectorizedExecutor):
                 padded.append(arr.reshape(1, -1))
         stage = Stage(operands=tuple(operands), out_subs=out_subs,
                       out_shape=oshape, reduce=False, block=self.block,
-                      nseg=0, interpret=self.interpret)
+                      nseg=0, interpret=self.interpret,
+                      tile=self.tile_align)
+        self.emitted_stages.append(stage)
         per_fiber = run_product_stage(stage, padded, dtype)
         arr = per_fiber[:nfib].reshape((nfib,) + oshape)
         if reduce_:

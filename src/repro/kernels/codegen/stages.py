@@ -27,6 +27,28 @@ structure:
 Stages are pure descriptions (shapes, subscripts, block size); emission
 happens at trace time, so one jit of the enclosing executor compiles the
 whole plan.
+
+Tile alignment (compiled mode, DESIGN.md §8)
+--------------------------------------------
+Real TPUs constrain VMEM blocks to hardware tiles: the last (lane)
+dimension must be a multiple of :data:`TILE_LANE` (128) and the
+second-to-last (sublane) dimension a multiple of :data:`TILE_SUBLANE`
+(8) for float32.  ``Stage.tile`` turns on the pad-to-tile lowering:
+
+* every operand/output block's flattened dense width is zero-padded up
+  to the next lane multiple (``Stage.op_pad`` / ``Stage.out_pad``); the
+  kernel slices the real width back out before the einsum, so padded
+  lanes never enter the contraction and the result is bit-identical to
+  the unpadded lowering;
+* the ``(block, 1)`` pad-slot mask input — whose lane width cannot be
+  tile-aligned without 128x waste — is folded into the first fiber
+  operand *before* the kernel (:func:`_premask`), so padded rows and
+  zero-nnz segment tails still contribute exact zeros;
+* callers must supply ``block`` as a multiple of :data:`TILE_SUBLANE`
+  (the executor rounds up; the autotuner sweeps aligned blocks only).
+
+The pass changes only shapes, never values, so interpret mode with
+``tile=True`` is the CPU-testable witness for the compiled lowering.
 """
 from __future__ import annotations
 
@@ -37,6 +59,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.util import round_up
+
+# float32 hardware tile: (sublane, lane) = (8, 128).  Wider dtypes only
+# shrink the sublane constraint, so aligning to the float32 tile is valid
+# for every dtype the stages accumulate at (>= float32).
+TILE_LANE = 128
+TILE_SUBLANE = 8
+
+
+def lane_pad(dim: int) -> int:
+    """Next multiple of :data:`TILE_LANE` at or above ``dim``."""
+    return round_up(dim, TILE_LANE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,7 +102,9 @@ def accumulator_type(dtype) -> jnp.dtype:
 class Stage:
     """A single generated kernel: ``einsum(operands) -> out_subs`` per
     block, reduced over the fiber axis into ``nseg`` segment rows when
-    ``reduce`` is set."""
+    ``reduce`` is set.  ``tile`` selects the pad-to-tile lowering (lane
+    widths padded to :data:`TILE_LANE`, mask pre-folded) required for
+    ``interpret=False`` on real TPUs."""
 
     operands: tuple[StageOperand, ...]
     out_subs: str
@@ -76,10 +113,20 @@ class Stage:
     block: int
     nseg: int            # segment-row count (reduce stages only)
     interpret: bool
+    tile: bool = False
 
     @property
     def out_flat_dim(self) -> int:
         return math.prod(self.out_shape)
+
+    def op_pad(self, op: StageOperand) -> int:
+        """Lane width of ``op``'s block (padded in tile mode)."""
+        return lane_pad(op.flat_dim) if self.tile else op.flat_dim
+
+    @property
+    def out_pad(self) -> int:
+        """Lane width of the output block (padded in tile mode)."""
+        return lane_pad(self.out_flat_dim) if self.tile else self.out_flat_dim
 
     @property
     def expr(self) -> str:
@@ -88,13 +135,41 @@ class Stage:
         return f"{ins}->{'' if self.reduce else 'Z'}{self.out_subs}"
 
 
+def _premask(stage: Stage, padded, mask: jnp.ndarray):
+    """Fold the pad-slot mask into the first fiber operand ahead of the
+    kernel (tile mode: the ``(block, 1)`` mask input has no tile-legal
+    lane width, so masking happens in XLA where a (P, 1) broadcast is
+    free).  Pad slots gather nonzero 0's values — one zero factor per
+    product is necessary and sufficient for their partials to vanish."""
+    out = list(padded)
+    for i, op in enumerate(stage.operands):
+        if op.fiber:
+            out[i] = out[i] * mask.astype(out[i].dtype)
+            break
+    return out
+
+
+def _lane_padded(arr: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Zero-pad the last dim of a 2-D array up to ``width`` — used both on
+    operand arrays ahead of the kernel and on kernel partials before they
+    accumulate, so output pad lanes only ever hold zeros and the caller's
+    final column slice is exact."""
+    if arr.shape[-1] == width:
+        return arr
+    return jnp.pad(arr, ((0, 0), (0, width - arr.shape[-1])))
+
+
 def _load_operands(stage: Stage, in_refs, mask_ref):
     """Read each operand block and restore its dense shape; the mask is
-    folded into the first fiber operand so pad slots contribute zero."""
+    folded into the first fiber operand so pad slots contribute zero.
+    Tile mode slices the padded lanes back off before the reshape, so
+    the einsum always sees exact (unpadded) operands."""
     vals = []
     masked = mask_ref is None
     for ref, op in zip(in_refs, stage.operands):
         v = ref[...]
+        if v.shape[-1] != op.flat_dim:
+            v = v[:, :op.flat_dim]
         if op.fiber:
             v = v.reshape((stage.block,) + op.shape)
             if not masked:
@@ -116,9 +191,17 @@ def run_reduce_stage(stage: Stage, block_seg: jnp.ndarray,
     blocks; ``block_first`` fires the Algorithm-2 reset."""
 
     acc_t = accumulator_type(dtype)
+    tile = stage.tile
+    if tile:
+        padded = _premask(stage, padded, mask)
+        padded = [_lane_padded(a, stage.op_pad(op))
+                  for a, op in zip(padded, stage.operands)]
+    out_pad = stage.out_pad
 
-    def kernel(bs_ref, bf_ref, m_ref, *refs):
-        in_refs, o_ref = refs[:-1], refs[-1]
+    def kernel(bs_ref, bf_ref, *refs):
+        m_ref = None if tile else refs[0]
+        in_refs = refs[(0 if tile else 1):-1]
+        o_ref = refs[-1]
         b = pl.program_id(0)
 
         @pl.when(bf_ref[b] == 1)
@@ -128,31 +211,38 @@ def run_reduce_stage(stage: Stage, block_seg: jnp.ndarray,
         vals = _load_operands(stage, in_refs, m_ref)
         part = jnp.einsum(stage.expr, *vals,
                           preferred_element_type=acc_t)
-        o_ref[...] += part.reshape(1, stage.out_flat_dim).astype(o_ref.dtype)
+        part = _lane_padded(part.reshape(1, stage.out_flat_dim), out_pad)
+        o_ref[...] += part.astype(o_ref.dtype)
 
     P = mask.shape[0]
-    in_specs = [pl.BlockSpec((stage.block, 1), lambda i, bs, bf: (i, 0))]
+    in_specs = []
+    if not tile:
+        in_specs.append(pl.BlockSpec((stage.block, 1),
+                                     lambda i, bs, bf: (i, 0)))
     for op in stage.operands:
+        w = stage.op_pad(op)
         if op.fiber:
-            in_specs.append(pl.BlockSpec((stage.block, op.flat_dim),
+            in_specs.append(pl.BlockSpec((stage.block, w),
                                          lambda i, bs, bf: (i, 0)))
         else:
-            in_specs.append(pl.BlockSpec((1, op.flat_dim),
+            in_specs.append(pl.BlockSpec((1, w),
                                          lambda i, bs, bf: (0, 0)))
     gs = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(P // stage.block,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, stage.out_flat_dim),
+        out_specs=pl.BlockSpec((1, out_pad),
                                lambda i, bs, bf: (bs[i], 0)),
     )
-    return pl.pallas_call(
+    inputs = tuple(padded) if tile else (mask, *padded)
+    out = pl.pallas_call(
         kernel,
         grid_spec=gs,
-        out_shape=jax.ShapeDtypeStruct((stage.nseg, stage.out_flat_dim),
-                                       dtype),
+        out_shape=jax.ShapeDtypeStruct((stage.nseg, out_pad), dtype),
         interpret=stage.interpret,
-    )(block_seg, block_first, mask, *padded)
+    )(block_seg, block_first, *inputs)
+    return out[:, :stage.out_flat_dim] if out_pad != stage.out_flat_dim \
+        else out
 
 
 def run_product_stage(stage: Stage, padded, dtype) -> jnp.ndarray:
@@ -160,33 +250,41 @@ def run_product_stage(stage: Stage, padded, dtype) -> jnp.ndarray:
     output blocks; pad rows are sliced off by the caller."""
 
     acc_t = accumulator_type(dtype)
+    if stage.tile:
+        padded = [_lane_padded(a, stage.op_pad(op))
+                  for a, op in zip(padded, stage.operands)]
+    out_pad = stage.out_pad
 
     def kernel(*refs):
         in_refs, o_ref = refs[:-1], refs[-1]
         vals = _load_operands(stage, in_refs, None)
         part = jnp.einsum(stage.expr, *vals,
                           preferred_element_type=acc_t)
-        o_ref[...] = part.reshape(stage.block,
-                                  stage.out_flat_dim).astype(o_ref.dtype)
+        part = _lane_padded(part.reshape(stage.block, stage.out_flat_dim),
+                            out_pad)
+        o_ref[...] = part.astype(o_ref.dtype)
 
     P = next(a.shape[0] for a, op in zip(padded, stage.operands) if op.fiber)
     in_specs = []
     for op in stage.operands:
+        w = stage.op_pad(op)
         if op.fiber:
-            in_specs.append(pl.BlockSpec((stage.block, op.flat_dim),
+            in_specs.append(pl.BlockSpec((stage.block, w),
                                          lambda i: (i, 0)))
         else:
-            in_specs.append(pl.BlockSpec((1, op.flat_dim),
+            in_specs.append(pl.BlockSpec((1, w),
                                          lambda i: (0, 0)))
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=(P // stage.block,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((stage.block, stage.out_flat_dim),
+        out_specs=pl.BlockSpec((stage.block, out_pad),
                                lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((P, stage.out_flat_dim), dtype),
+        out_shape=jax.ShapeDtypeStruct((P, out_pad), dtype),
         interpret=stage.interpret,
     )(*padded)
+    return out[:, :stage.out_flat_dim] if out_pad != stage.out_flat_dim \
+        else out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -237,21 +335,39 @@ def run_fused_chain_stage(stage: Stage, links: tuple[ChainLink, ...],
     ``seg_lvls[k]`` is the per-block segment id at chain level ``k`` —
     levels ``0..C-2`` drive the link operands' scalar-prefetched index
     maps, level ``C-1`` drives the output BlockSpec.
+
+    Under ``stage.tile`` every operand/buffer/output lane width is padded
+    to :data:`TILE_LANE` (sliced back before each einsum) and the mask is
+    pre-folded into the innermost fiber operands, exactly as in the
+    single-stage runners.
     """
     C = len(links) + 1           # chain length in terms
     acc_t = accumulator_type(dtype)
     nsc = 3 * C - 1              # C segs + C firsts + (C-1) lasts
+    tile = stage.tile
     out_flat = links[-1].out_flat_dim
+    out_pad = lane_pad(out_flat) if tile else out_flat
     n_stage = len(stage.operands)
+    link_ops_flat = [op for link in links for op in link.operands[1:]]
+    # per-level crossing-buffer lane widths (scratch shapes + flush pads)
+    buf_w = [lane_pad(link.operands[0].flat_dim) if tile
+             else link.operands[0].flat_dim for link in links]
+    if tile:
+        padded = _premask(stage, padded, mask)
+        padded = [_lane_padded(a, stage.op_pad(op))
+                  for a, op in zip(padded, stage.operands)]
+        link_arrays = [_lane_padded(a, lane_pad(op.flat_dim))
+                       for a, op in zip(link_arrays, link_ops_flat)]
 
     def kernel(*refs):
         segs = refs[:C]
         firsts = refs[C:2 * C]
         lasts = refs[2 * C:nsc]
         del segs                 # index maps consume them; kernel does not
-        m_ref = refs[nsc]
-        in_refs = refs[nsc + 1:nsc + 1 + n_stage]
-        link_refs = refs[nsc + 1 + n_stage:-1 - (C - 1)]
+        off = nsc if tile else nsc + 1
+        m_ref = None if tile else refs[nsc]
+        in_refs = refs[off:off + n_stage]
+        link_refs = refs[off + n_stage:-1 - (C - 1)]
         o_ref = refs[-1 - (C - 1)]
         bufs = refs[len(refs) - (C - 1):]
         b = pl.program_id(0)
@@ -267,56 +383,68 @@ def run_fused_chain_stage(stage: Stage, links: tuple[ChainLink, ...],
 
         vals = _load_operands(stage, in_refs, m_ref)
         part = jnp.einsum(stage.expr, *vals, preferred_element_type=acc_t)
-        bufs[0][...] += part.reshape(1, stage.out_flat_dim)
+        part = _lane_padded(part.reshape(1, stage.out_flat_dim), buf_w[0])
+        bufs[0][...] += part
 
         pos = 0
         for j, link in enumerate(links):
             dst = bufs[j + 1] if j + 1 < C - 1 else o_ref
+            dst_w = buf_w[j + 1] if j + 1 < C - 1 else out_pad
             others = link_refs[pos:pos + len(link.operands) - 1]
             pos += len(link.operands) - 1
 
             @pl.when(lasts[j][b] == 1)
-            def _flush(j=j, link=link, dst=dst, others=others):
-                iv = [bufs[j][...].reshape((1,) + link.operands[0].shape)]
+            def _flush(j=j, link=link, dst=dst, dst_w=dst_w, others=others):
+                bv = bufs[j][...]
+                if bv.shape[-1] != link.operands[0].flat_dim:
+                    bv = bv[:, :link.operands[0].flat_dim]
+                iv = [bv.reshape((1,) + link.operands[0].shape)]
                 for ref, op in zip(others, link.operands[1:]):
                     v = ref[...]
+                    if v.shape[-1] != op.flat_dim:
+                        v = v[:, :op.flat_dim]
                     iv.append(v.reshape(((1,) + op.shape) if op.fiber
                                         else op.shape))
                 out = jnp.einsum(link.expr, *iv,
                                  preferred_element_type=acc_t)
-                dst[...] += out.reshape(1, link.out_flat_dim).astype(
-                    dst.dtype)
+                out = _lane_padded(out.reshape(1, link.out_flat_dim), dst_w)
+                dst[...] += out.astype(dst.dtype)
 
     P = mask.shape[0]
-    in_specs = [pl.BlockSpec((stage.block, 1), lambda i, *s: (i, 0))]
+    in_specs = []
+    if not tile:
+        in_specs.append(pl.BlockSpec((stage.block, 1), lambda i, *s: (i, 0)))
     for op in stage.operands:
+        w = stage.op_pad(op)
         if op.fiber:
-            in_specs.append(pl.BlockSpec((stage.block, op.flat_dim),
+            in_specs.append(pl.BlockSpec((stage.block, w),
                                          lambda i, *s: (i, 0)))
         else:
-            in_specs.append(pl.BlockSpec((1, op.flat_dim),
+            in_specs.append(pl.BlockSpec((1, w),
                                          lambda i, *s: (0, 0)))
     for j, link in enumerate(links):
         for op in link.operands[1:]:
+            w = lane_pad(op.flat_dim) if tile else op.flat_dim
             if op.fiber:
                 in_specs.append(pl.BlockSpec(
-                    (1, op.flat_dim), lambda i, *s, j=j: (s[j][i], 0)))
+                    (1, w), lambda i, *s, j=j: (s[j][i], 0)))
             else:
-                in_specs.append(pl.BlockSpec((1, op.flat_dim),
+                in_specs.append(pl.BlockSpec((1, w),
                                              lambda i, *s: (0, 0)))
     gs = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=nsc,
         grid=(P // stage.block,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, out_flat),
+        out_specs=pl.BlockSpec((1, out_pad),
                                lambda i, *s: (s[C - 1][i], 0)),
-        scratch_shapes=[
-            pltpu.VMEM((1, link.operands[0].flat_dim), acc_t)
-            for link in links],
+        scratch_shapes=[pltpu.VMEM((1, w), acc_t) for w in buf_w],
     )
-    return pl.pallas_call(
+    inputs = (*padded, *link_arrays) if tile else (mask, *padded,
+                                                   *link_arrays)
+    out = pl.pallas_call(
         kernel,
         grid_spec=gs,
-        out_shape=jax.ShapeDtypeStruct((nseg_out, out_flat), dtype),
+        out_shape=jax.ShapeDtypeStruct((nseg_out, out_pad), dtype),
         interpret=stage.interpret,
-    )(*seg_lvls, *first_lvls, *last_lvls, mask, *padded, *link_arrays)
+    )(*seg_lvls, *first_lvls, *last_lvls, *inputs)
+    return out[:, :out_flat] if out_pad != out_flat else out

@@ -174,31 +174,41 @@ def test_make_executor_backends_share_semantics():
         make_executor(spec, p.path, p.order, backend="triton")
 
 
-def test_plan_json_v4_round_trip_with_backend():
+def test_plan_json_v5_round_trip_with_backend():
     spec = S.mttkrp(8, 6, 5, 3)
     p = plan(spec)
     import dataclasses
-    tagged = dataclasses.replace(p, backend="pallas", fused=True)
+    tagged = dataclasses.replace(p, backend="pallas", fused=True, block=16)
     doc = plan_to_dict(tagged)
-    assert doc["version"] == PLAN_JSON_VERSION == 4
+    assert doc["version"] == PLAN_JSON_VERSION == 5
     assert doc["backend"] == "pallas"
     assert doc["mesh"] is None            # single-device plan
     assert doc["fused"] is True
+    assert doc["block"] == 16
     rt = plan_from_json(plan_to_json(tagged))
     assert rt == tagged and rt.backend == "pallas" and rt.fused
+    assert rt.block == 16
     # a plan serialized without an explicit backend defaults to xla,
-    # and one without an explicit fused flag defaults to staged
+    # one without an explicit fused flag defaults to staged, and one
+    # without an explicit block defaults to the engine default
     doc2 = plan_to_dict(p)
     del doc2["backend"]
     del doc2["fused"]
+    del doc2["block"]
     rt2 = plan_from_dict(doc2)
-    assert rt2.backend == "xla" and rt2.fused is False
+    assert rt2.backend == "xla" and rt2.fused is False and rt2.block is None
     # a non-boolean fused flag is rejected, not coerced
     with pytest.raises(ValueError, match="plan fused"):
         plan_from_dict(dict(plan_to_dict(p), fused="yes"))
+    # so is a non-integer, non-positive, or sublane-misaligned block —
+    # compiled-mode replay would otherwise silently round it (rejected,
+    # never coerced)
+    for bad in ("128", 0, -8, True, 12):
+        with pytest.raises(ValueError, match="plan block"):
+            plan_from_dict(dict(plan_to_dict(p), block=bad))
 
 
-@pytest.mark.parametrize("version", [1, 2, 3, None, "4"])
+@pytest.mark.parametrize("version", [1, 2, 3, 4, None, "5"])
 def test_plan_json_rejects_foreign_versions(version):
     """Forward/backward compat is re-plan-never-guess: any version other
     than the current one is rejected outright."""
@@ -314,8 +324,8 @@ def test_cached_plan_meta_records_backends(tmp_path):
     assert len(files) == 1
     with open(tmp_path / files[0]) as f:
         doc = json.load(f)
-    assert doc["plan"]["version"] == 4
-    assert doc["cache_version"] == 4
+    assert doc["plan"]["version"] == 5
+    assert doc["cache_version"] == 5
     assert set(doc["meta"]["backends"]) == {"xla", "pallas"}
-    assert all("backend" in t and "fused" in t
+    assert all("backend" in t and "fused" in t and "block" in t
                for t in doc["meta"]["timings"])

@@ -5,7 +5,7 @@ single-device Algorithm-2 reference to 1e-5 on MTTKRP and TTMc, with each
 shard's plan landing in (and replaying from) the mesh-keyed plan cache;
 (b) the cache key's mesh component — a sharded pattern never reuses a
 single-device winner, and changing the mesh axis is a miss; (c) plan JSON
-v4 round-trips the mesh/shard fields and rejects v3; (d) ``execute_plan``
+v5 round-trips the mesh/shard fields and rejects v4; (d) ``execute_plan``
 over sharded operands sums per-shard partials exactly; (e) the codegen
 strategy choice consumes per-shard segment profiles.
 """
@@ -72,14 +72,14 @@ for name, spec, shape in [
     live = [sh for sh in dist.shards if sh.plan is not None]
     assert live and all(not sh.stats.cache_hit for sh in live)
     # cache inspection: one mesh-keyed entry per shard, each carrying the
-    # shard context and the tuned backend in plan JSON v4
+    # shard context and the tuned backend in plan JSON v5
     entries = sorted(os.listdir(d))
     assert len(entries) == len(live), (entries, len(live))
     shards_seen, backends_seen = set(), set()
     for fname in entries:
         with open(os.path.join(d, fname)) as f:
             doc = json.load(f)
-        assert doc["plan"]["version"] == 4
+        assert doc["plan"]["version"] == 5
         m = doc["plan"]["mesh"]
         assert m["mesh_shape"] == {{"data": 4}}
         assert m["mode_axis"] == {{"0": "data"}}
@@ -172,23 +172,23 @@ def test_sharded_search_misses_single_device_entry(tmp_path):
 
 
 # --------------------------------------------------------------------- #
-# (c) plan JSON v4: mesh fields round-trip, v3 rejected
+# (c) plan JSON v5: mesh fields round-trip, v4 rejected
 # --------------------------------------------------------------------- #
-def test_plan_json_v4_mesh_round_trip():
+def test_plan_json_v5_mesh_round_trip():
     p = plan(S.mttkrp(8, 6, 5, 3))
     tagged = dataclasses.replace(
         p, mesh=shard_mesh_key({"data": 4}, {0: "data"}, 2))
     doc = plan_to_dict(tagged)
-    assert doc["version"] == 4
+    assert doc["version"] == 5
     assert doc["mesh"]["shard"] == 2
     rt = plan_from_json(plan_to_json(tagged))
     assert rt == tagged and rt.mesh == tagged.mesh
     assert plan_from_json(plan_to_json(p)).mesh is None
 
 
-def test_plan_json_rejects_v3_and_bad_mesh():
+def test_plan_json_rejects_v4_and_bad_mesh():
     doc = plan_to_dict(plan(S.mttkrp(8, 6, 5, 3)))
-    doc2 = dict(doc, version=3)
+    doc2 = dict(doc, version=4)
     with pytest.raises(ValueError, match="unsupported plan version"):
         plan_from_dict(doc2)
     doc3 = dict(doc, mesh="data:4")

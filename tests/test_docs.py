@@ -21,6 +21,7 @@ MARKDOWN_WITH_DOCTESTS = [
     "docs/architecture.md",
     "docs/plan-format.md",
     "docs/distributed.md",
+    "docs/cost-models.md",
 ]
 
 # the public API surface whose docstrings carry runnable examples
@@ -28,6 +29,8 @@ API_MODULES = [
     "repro.core.spec",
     "repro.core.planner",
     "repro.core.executor",
+    "repro.core.cost",
+    "repro.core.order_dp",
     "repro.autotune.cache",
     "repro.autotune.tuner",
     "repro.distributed.spttn_dist",
@@ -50,10 +53,25 @@ def test_api_docstring_examples_run(modname):
     assert res.failed == 0, f"{modname}: {res.failed} failing example(s)"
 
 
-def test_no_broken_intra_repo_links(capsys):
+def _load_script(name):
     spec = importlib.util.spec_from_file_location(
-        "check_doc_links", os.path.join(REPO, "scripts",
-                                        "check_doc_links.py"))
+        name, os.path.join(REPO, "scripts", f"{name}.py"))
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
+    return mod
+
+
+def test_no_broken_intra_repo_links(capsys):
+    mod = _load_script("check_doc_links")
     assert mod.main(["check_doc_links.py", REPO]) == 0, capsys.readouterr().out
+
+
+def test_every_doc_is_registered(capsys):
+    """Mirror of the CI docs-registration lint: a docs/*.md added without
+    an entry in MARKDOWN_WITH_DOCTESTS would never have its examples run,
+    so it fails here and in the docs lane."""
+    mod = _load_script("check_docs_registered")
+    assert mod.main(["check_docs_registered.py", REPO]) == 0, \
+        capsys.readouterr().out
+    # the script reads the same registry this module executes
+    assert set(mod.registered_docs(REPO)) == set(MARKDOWN_WITH_DOCTESTS)

@@ -206,7 +206,7 @@ def test_fused_winner_persists_and_replays(tmp_path):
 
     fused_plan = dataclasses.replace(tuned, fused=True)
     doc = plan_to_dict(fused_plan)
-    assert doc["version"] == 4 and doc["fused"] is True
+    assert doc["version"] == 5 and doc["fused"] is True
     rt = plan_from_json(plan_to_json(fused_plan))
     assert rt == fused_plan and rt.fused
 
@@ -354,19 +354,19 @@ def test_cache_version_guard_rejects_doctored_v3_entry(tmp_path):
 
     with open(path) as f:
         doc = json.load(f)
-    assert doc["cache_version"] == CACHE_VERSION == 4
-    # doctor the entry back to the v3 era: stale stamp, v3 plan schema
-    doc["cache_version"] = 3
-    doc["plan"]["version"] = 3
-    doc["plan"].pop("fused", None)
+    assert doc["cache_version"] == CACHE_VERSION == 5
+    # doctor the entry back to the v4 era: stale stamp, v4 plan schema
+    doc["cache_version"] = 4
+    doc["plan"]["version"] = 4
+    doc["plan"].pop("block", None)
     with open(path, "w") as f:
         json.dump(doc, f)
     assert cache.get("k") is None           # clean miss, no exception
 
     # an entry missing the stamp entirely (pre-guard writer) also misses
     doc.pop("cache_version")
-    doc["plan"]["version"] = 4
-    doc["plan"]["fused"] = False
+    doc["plan"]["version"] = 5
+    doc["plan"]["block"] = None
     with open(path, "w") as f:
         json.dump(doc, f)
     assert cache.get("k") is None

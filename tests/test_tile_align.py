@@ -1,0 +1,378 @@
+"""Pad-to-tile lowering pass (DESIGN.md §8) + the tuned block axis.
+
+(a) Shape inspection: with ``tile_align=True`` every generated stage —
+row, segsum, and fused-chain — has a block that is a multiple of the
+TPU sublane tile (8) and operand/output lane widths padded to 128, the
+tile-legality precondition for ``interpret=False`` on real TPUs.
+(b) The pass is value-preserving: interpret-mode parity vs the
+Algorithm-2 reference at 1e-5 on MTTKRP/TTMc/TTTP, including the edge
+cases (dims already lane-aligned, dims far below one tile, zero-nnz
+padded tails).
+(c) ``block`` is an autotuning axis: candidates expand across the
+grid, the winner's block persists in plan JSON v5 (v4 rejected by the
+loader and the cache), and ``execute_plan`` / ``make_distributed_tuned``
+replay it.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.autotune import TunerConfig, generate_candidates, tune
+from repro.autotune.cache import CACHE_VERSION, PlanCache, cache_key
+from repro.core import spec as S
+from repro.core.executor import (CSFArrays, PLAN_JSON_VERSION, dense_oracle,
+                                 execute_plan, make_executor,
+                                 plan_from_dict, plan_to_dict,
+                                 reference_execute)
+from repro.core.planner import plan
+from repro.kernels.codegen import (TILE_LANE, TILE_SUBLANE,
+                                   PallasPlanExecutor, lane_pad)
+from repro.sparse import build_csf, random_sparse
+from repro.sparse.coo import from_coords
+
+
+def _factors(spec, rng, dtype=np.float32):
+    return {t.name: rng.standard_normal(
+        [spec.dims[i] for i in t.indices]).astype(dtype)
+        for t in spec.inputs if not t.is_sparse}
+
+
+def _densify(spec, csf, out):
+    if not spec.output_is_sparse:
+        return np.asarray(out)
+    dense = np.zeros([spec.dims[i] for i in spec.output.indices])
+    dense[tuple(csf.coo.coords.T)] = np.asarray(out)
+    return dense
+
+
+def _assert_tile_aligned(ex):
+    """Every stage the executor emitted satisfies the TPU tile rules."""
+    assert ex.emitted_stages, "executor emitted no stages to inspect"
+    assert ex.block % TILE_SUBLANE == 0
+    for st in ex.emitted_stages:
+        assert st.tile
+        assert st.block % TILE_SUBLANE == 0
+        assert st.out_pad % TILE_LANE == 0
+        for op in st.operands:
+            assert st.op_pad(op) % TILE_LANE == 0
+    for _, links in ex.emitted_chains:
+        for link in links:
+            for op in link.operands:
+                assert lane_pad(op.flat_dim) % TILE_LANE == 0
+
+
+# --------------------------------------------------------------------- #
+# (a)+(b) tile-aligned specs for all three stage kinds, interpret parity
+# --------------------------------------------------------------------- #
+TILE_KERNELS = [
+    pytest.param(S.mttkrp(6, 7, 8, 4), 0.3, id="mttkrp"),
+    pytest.param(S.ttmc3(6, 7, 8, 4, 3), 0.3, id="ttmc"),
+    pytest.param(S.tttp3(6, 7, 8, 4), 0.3, id="tttp"),
+]
+
+
+@pytest.mark.parametrize("spec,density", TILE_KERNELS)
+@pytest.mark.parametrize("strategy", ["row", "segsum"])
+def test_tile_aligned_stages_match_reference(spec, density, strategy):
+    rng = np.random.default_rng(1)
+    shape = tuple(spec.dims[i] for i in spec.sparse_indices)
+    csf = build_csf(random_sparse(shape, density, seed=3))
+    factors = _factors(spec, rng)
+    arrays = CSFArrays.from_csf(csf)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ref = reference_execute(spec, p.path, p.order, csf, factors)
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=16, interpret=True,
+                            strategy=strategy, tile_align=True)
+    out = _densify(spec, csf, ex(arrays, factors))
+    np.testing.assert_allclose(out, ref, atol=1e-5, err_msg=str(spec))
+    _assert_tile_aligned(ex)
+
+
+def test_tile_aligned_fused_chain_matches_reference():
+    """The fused-chain kind: one kernel, every level's buffer and link
+    operand lane-padded, same answer."""
+    spec = S.mttkrp(16, 12, 10, 4)
+    csf = build_csf(random_sparse((16, 12, 10), 0.1, seed=3))
+    rng = np.random.default_rng(0)
+    factors = _factors(spec, rng)
+    arrays = CSFArrays.from_csf(csf)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ref = reference_execute(spec, p.path, p.order, csf, factors)
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8, interpret=True,
+                            strategy="fused", tile_align=True)
+    np.testing.assert_allclose(np.asarray(ex(arrays, factors)), ref,
+                               atol=1e-5)
+    assert "fused" in ex.stage_strategy.values()
+    assert ex.emitted_chains          # the chain stage really was emitted
+    _assert_tile_aligned(ex)
+
+
+def test_emitted_stages_reset_per_call():
+    """A long-lived executor's inspection surface reflects only its
+    latest trace — repeated eager calls must not accumulate stages."""
+    spec = S.mttkrp(6, 7, 8, 4)
+    csf = build_csf(random_sparse((6, 7, 8), 0.3, seed=3))
+    rng = np.random.default_rng(1)
+    factors = _factors(spec, rng)
+    arrays = CSFArrays.from_csf(csf)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8, interpret=True,
+                            tile_align=True)
+    ex(arrays, factors)
+    first = (len(ex.emitted_stages), dict(ex.stage_strategy))
+    ex(arrays, factors)
+    assert (len(ex.emitted_stages), dict(ex.stage_strategy)) == first
+
+
+def test_block_forced_to_sublane_multiple_only_in_tile_mode():
+    spec = S.mttkrp(6, 7, 8, 4)
+    p = plan(spec)
+    tiled = PallasPlanExecutor(spec, p.path, p.order, block=5,
+                               interpret=True, tile_align=True)
+    assert tiled.block == 8
+    loose = PallasPlanExecutor(spec, p.path, p.order, block=5,
+                               interpret=True, tile_align=False)
+    assert loose.block == 5           # interpret mode keeps the request
+    with pytest.raises(ValueError, match="block must be positive"):
+        PallasPlanExecutor(spec, p.path, p.order, block=0, interpret=True)
+
+
+def test_tile_align_defaults_to_compiled_mode():
+    """tile_align=None resolves to (not interpret): interpret-mode
+    validation stays unpadded, compiled mode gets the pass."""
+    spec = S.mttkrp(6, 7, 8, 4)
+    p = plan(spec)
+    ex = PallasPlanExecutor(spec, p.path, p.order, interpret=True)
+    assert ex.tile_align is False
+    ex = PallasPlanExecutor(spec, p.path, p.order, interpret=False,
+                            tile_align=None)
+    assert ex.tile_align is True
+
+
+# --------------------------------------------------------------------- #
+# (b) edge cases
+# --------------------------------------------------------------------- #
+def test_already_lane_aligned_dims_pad_nothing():
+    """R=128: flattened dense widths are already lane multiples, so the
+    pass is a no-op on widths (and still exact)."""
+    spec = S.mttkrp(6, 5, 4, 128)
+    csf = build_csf(random_sparse((6, 5, 4), 0.3, seed=2))
+    rng = np.random.default_rng(1)
+    factors = _factors(spec, rng)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8, interpret=True,
+                            tile_align=True)
+    out = np.asarray(ex(CSFArrays.from_csf(csf), factors))
+    np.testing.assert_allclose(out, dense_oracle(spec, csf, factors),
+                               atol=1e-4)
+    _assert_tile_aligned(ex)
+    for st in ex.emitted_stages:
+        assert st.out_pad == st.out_flat_dim          # no padding added
+        for op in st.operands:
+            if op.flat_dim % 128 == 0:    # already aligned: no-op
+                assert st.op_pad(op) == op.flat_dim
+            else:                         # the width-1 values operand
+                assert op.flat_dim == 1 and st.op_pad(op) == 128
+
+
+def test_dims_smaller_than_one_tile():
+    """R=3: every lane width pads 3 -> 128; the slices must recover the
+    exact 3-wide results."""
+    spec = S.mttkrp(6, 7, 8, 3)
+    csf = build_csf(random_sparse((6, 7, 8), 0.3, seed=5))
+    rng = np.random.default_rng(4)
+    factors = _factors(spec, rng)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8, interpret=True,
+                            tile_align=True)
+    out = np.asarray(ex(CSFArrays.from_csf(csf), factors))
+    np.testing.assert_allclose(out, dense_oracle(spec, csf, factors),
+                               atol=1e-5)
+    for st in ex.emitted_stages:
+        assert st.out_pad == 128 or st.out_flat_dim % 128 == 0
+
+
+def test_single_nnz_padded_tail_contributes_zero():
+    """One nonzero in a block of 8: the 7 pad slots gather nonzero 0's
+    values and must be annihilated by the pre-folded mask."""
+    spec = S.mttkrp(6, 7, 8, 4)
+    csf = build_csf(from_coords(np.array([[1, 2, 3]]),
+                                np.array([2.0], np.float32), (6, 7, 8)))
+    rng = np.random.default_rng(4)
+    factors = {k: jnp.asarray(v) for k, v in _factors(spec, rng).items()}
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8, interpret=True,
+                            tile_align=True)
+    fn = jax.jit(lambda f: ex(CSFArrays.from_csf(csf), f))
+    out = np.asarray(fn(factors))
+    np.testing.assert_allclose(
+        out, dense_oracle(spec, csf,
+                          {k: np.asarray(v) for k, v in factors.items()}),
+        atol=1e-5)
+
+
+def test_zero_nnz_tensor_through_tile_mode():
+    """An empty pattern emits no stages and returns exact zeros — the
+    degenerate tail of the pad-to-tile path."""
+    spec = S.mttkrp(6, 7, 8, 4)
+    csf = build_csf(from_coords(np.zeros((0, 3), np.int64),
+                                np.zeros(0, np.float32), (6, 7, 8)))
+    rng = np.random.default_rng(4)
+    factors = _factors(spec, rng)
+    p = plan(spec)
+    ex = PallasPlanExecutor(spec, p.path, p.order, block=8, interpret=True,
+                            tile_align=True)
+    out = np.asarray(ex(CSFArrays.from_csf(csf), factors))
+    assert out.shape == (6, 4)
+    np.testing.assert_array_equal(out, 0.0)
+
+
+# --------------------------------------------------------------------- #
+# (c) block as an autotuning axis + plan JSON v5
+# --------------------------------------------------------------------- #
+def _mttkrp_inputs():
+    spec = S.mttkrp(16, 12, 10, 4)
+    csf = build_csf(random_sparse((16, 12, 10), 0.1, seed=3))
+    rng = np.random.default_rng(0)
+    factors = {k: jnp.asarray(v) for k, v in _factors(spec, rng).items()}
+    return spec, csf, factors
+
+
+def test_candidates_expand_across_block_grid():
+    spec, csf, _ = _mttkrp_inputs()
+    cands = generate_candidates(spec, nnz_levels=csf.nnz_levels(),
+                                max_paths=2, max_candidates=2,
+                                orders_per_path=1,
+                                backends=("xla", "pallas"),
+                                blocks=(8, 16))
+    assert len({c.key for c in cands}) == len(cands)
+    assert {c.block for c in cands if c.backend == "pallas"} == {8, 16}
+    assert all(c.block == 0 for c in cands if c.backend == "xla")
+    # the grid must be sublane-aligned up front — the pad-to-tile pass
+    # cannot repair a misaligned sweep without changing what is measured
+    for bad in ((12,), (0,), (-8,), ("128",)):
+        with pytest.raises(ValueError, match="multiples of 8"):
+            generate_candidates(spec, max_paths=2, max_candidates=1,
+                                orders_per_path=1, backends=("pallas",),
+                                blocks=bad)
+
+
+def test_blocks_grid_is_part_of_the_cache_key():
+    spec, csf, _ = _mttkrp_inputs()
+    levels = csf.nnz_levels()
+    default = cache_key(spec, levels, "cpu:x", backends=("pallas",))
+    swept = cache_key(spec, levels, "cpu:x", backends=("pallas",),
+                      blocks=(8, 16))
+    other = cache_key(spec, levels, "cpu:x", backends=("pallas",),
+                      blocks=(8,))
+    assert len({default, swept, other}) == 3
+
+
+def test_tuned_block_persists_and_replays(tmp_path):
+    """Sweep a two-point block grid under a forced pallas axis: the
+    winner's block lands in the plan + cache, survives the disk round
+    trip, and execute_plan compiles the replay at exactly that block."""
+    spec, csf, factors = _mttkrp_inputs()
+    cfg = TunerConfig(max_paths=2, max_candidates=1, orders_per_path=1,
+                      warmup=1, repeats=2, backends=("pallas",),
+                      blocks=(8, 16))
+    tuned, stats = tune(spec, csf=csf, factors=factors,
+                        cache_dir=str(tmp_path), config=cfg)
+    assert tuned.backend == "pallas"
+    assert tuned.block in (8, 16)
+    assert stats.candidates_timed >= 2       # both blocks reached the timer
+
+    # disk round trip: cache hit returns the same block
+    tuned2, stats2 = tune(spec, csf=csf, factors=factors,
+                          cache_dir=str(tmp_path), config=cfg)
+    assert stats2.cache_hit and tuned2 == tuned
+    assert tuned2.block == tuned.block
+
+    # the meta records every (block, seconds) pair that was measured
+    entry = json.loads((tmp_path / f"plan-{stats.cache_key}.json")
+                       .read_text())
+    assert entry["cache_version"] == CACHE_VERSION == 5
+    assert {t["block"] for t in entry["meta"]["timings"]} == {8, 16}
+
+    # execute_plan replays the tuned block on the generated-kernel engine
+    seen = {}
+    import repro.core.executor as core_exec
+    real = core_exec.make_executor
+
+    def spy(spec_, path_, order_, backend="xla", **kw):
+        seen.update(kw, backend=backend)
+        return real(spec_, path_, order_, backend=backend, **kw)
+
+    core_exec_make, core_exec.make_executor = \
+        core_exec.make_executor, spy
+    try:
+        out = execute_plan(tuned2, CSFArrays.from_csf(csf), factors)
+    finally:
+        core_exec.make_executor = core_exec_make
+    assert seen["backend"] == "pallas" and seen["block"] == tuned.block
+    oracle = dense_oracle(spec, csf,
+                          {k: np.asarray(v) for k, v in factors.items()})
+    np.testing.assert_allclose(np.asarray(out), oracle, atol=1e-4)
+
+
+def test_plan_json_v5_block_round_trip_and_v4_rejection():
+    p = plan(S.mttkrp(8, 6, 5, 3))
+    tagged = dataclasses.replace(p, backend="pallas", block=24)
+    doc = plan_to_dict(tagged)
+    assert doc["version"] == PLAN_JSON_VERSION == 5
+    assert doc["block"] == 24
+    rt = plan_from_dict(doc)
+    assert rt == tagged and rt.block == 24
+    # v4 documents (no block field, version 4) are rejected outright
+    v4 = dict(doc)
+    v4.pop("block")
+    v4["version"] = 4
+    with pytest.raises(ValueError, match="unsupported plan version 4"):
+        plan_from_dict(v4)
+
+
+def test_cache_rejects_v4_stamped_entry(tmp_path):
+    """A v4-era cache file restored under a current key name is a clean
+    miss — the loader never sees its plan document."""
+    cache = PlanCache(str(tmp_path))
+    p = plan(S.mttkrp(8, 6, 5, 3))
+    path = cache.put("k", p)
+    with open(path) as f:
+        doc = json.load(f)
+    doc["cache_version"] = 4
+    doc["plan"]["version"] = 4
+    doc["plan"].pop("block", None)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    assert cache.get("k") is None
+
+
+def test_distributed_replay_honors_per_shard_block(tmp_path):
+    """make_distributed_tuned replays each pallas shard at its tuned
+    block (single-device mesh keeps this CPU-runnable)."""
+    from jax.sharding import Mesh
+    from repro.distributed.spttn_dist import make_distributed_tuned
+    spec = S.mttkrp(16, 12, 10, 8)
+    T = random_sparse((16, 12, 10), 0.1, seed=2)
+    csf = build_csf(T)
+    rng = np.random.default_rng(0)
+    factors = {k: jnp.asarray(v) for k, v in _factors(spec, rng).items()}
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    cfg = TunerConfig(max_paths=2, max_candidates=1, orders_per_path=1,
+                      warmup=1, repeats=2, backends=("pallas",),
+                      blocks=(16,))
+    dist = make_distributed_tuned(spec, T, mesh, {0: "data"},
+                                  cache_dir=str(tmp_path), tuner=cfg)
+    assert dist.mode == "replay"
+    live = [sh for sh in dist.shards if sh.plan is not None]
+    assert live and all(sh.plan.backend == "pallas" and sh.plan.block == 16
+                        for sh in live)
+    single = plan(spec, nnz_levels=csf.nnz_levels())
+    ref = reference_execute(spec, single.path, single.order, csf,
+                            {k: np.asarray(v) for k, v in factors.items()})
+    np.testing.assert_allclose(dist(factors), ref, atol=1e-4)
