@@ -51,8 +51,8 @@ def main() -> int:
     scale = float(os.environ.get("SCALE", "0.5"))
     from benchmarks import (bench_dist, bench_index_order,
                             bench_moe_dispatch, bench_mttkrp, bench_search,
-                            bench_strong_scaling, bench_tttc, bench_tttp,
-                            bench_ttmc)
+                            bench_serve_latency, bench_strong_scaling,
+                            bench_tttc, bench_tttp, bench_ttmc)
 
     suites = [
         ("mttkrp", lambda: bench_mttkrp.run(scale=scale)),
@@ -65,6 +65,7 @@ def main() -> int:
         ("autotune", bench_search.run_autotune),
         ("moe_dispatch", bench_moe_dispatch.run),
         ("dist", lambda: bench_dist.run(scale=scale)),
+        ("serve_latency", bench_serve_latency.run),
     ]
     if os.environ.get("SCALING", "0") == "1":
         suites.append(("strong_scaling", bench_strong_scaling.run))

@@ -5,7 +5,7 @@ values, so a tuned schedule is reusable across process restarts and across
 tensors sharing a pattern.  The key is a content hash of
 
   (spec signature, CSF nnz-level profile, device kind, backend axis,
-   mesh/shard context, CACHE_VERSION)
+   mesh/shard context, profile-quantization scheme, CACHE_VERSION)
 
 - spec signature: canonical kernel string incl. names, dims, sparse marker;
 - nnz-level profile: {p: nnz^(I1..Ip)} — the exact quantity every cost
@@ -16,6 +16,10 @@ tensors sharing a pattern.  The key is a content hash of
 - mesh/shard context: mesh shape + partitioned axes + shard index for a
   distributed shard-local search (None for single-device), so a sharded
   pattern never reuses a single-device winner (DESIGN.md §7);
+- profile-quantization scheme: ``"exact"`` for the classic per-pattern
+  key; a bucketing scheme name (``"log2"``) for the serving-stream key
+  over a quantized profile, so a stream of perturbed patterns shares one
+  tuned plan (DESIGN.md §9) without ever colliding with an exact entry;
 - CACHE_VERSION: bumped whenever plan semantics / serialization change —
   the invalidation rule for stale entries (old files are simply unmatched,
   never read).
@@ -29,6 +33,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import math
 import os
 import tempfile
 from typing import Mapping
@@ -42,9 +47,49 @@ from repro.core.spec import SpTTNSpec
 # 4) and entries stamp ``cache_version`` so a stale-but-parseable file is
 # an explicit miss, not a downstream schema error.  v5: the Pallas block
 # axis (DESIGN.md §8) — the key gains a ``blocks`` grid component and
-# plans carry the winner's ``block`` (PLAN_JSON_VERSION 5).  Older entries
-# deserialize to a different schema and must be unmatched, never read.
-CACHE_VERSION = 5
+# plans carry the winner's ``block`` (PLAN_JSON_VERSION 5).  v6: the
+# serving hot path (DESIGN.md §9) — the key gains a ``profile`` component
+# naming how the nnz-level profile was quantized (``"exact"`` for the
+# classic per-pattern key, a bucketing scheme name for the shared
+# serving-stream key), so a bucketed winner can never shadow an exact one
+# and vice versa.  Older entries deserialize to a different schema and
+# must be unmatched, never read.
+CACHE_VERSION = 6
+
+# Profile-quantization schemes for serving streams (DESIGN.md §9): a
+# stream of near-identical patterns (MoE routing masks, per-user masks)
+# has a *different* exact profile per request, so the exact key is a
+# guaranteed cold miss.  Bucketing quantizes each level count before
+# keying, collapsing the stream onto one tuned plan.
+BUCKET_SCHEMES = ("log2",)
+
+
+def bucket_nnz_levels(nnz_levels: Mapping[int, int],
+                      scheme: str = "log2") -> dict[int, int]:
+    """Quantize an nnz-level profile for a bucketed cache key.
+
+    ``log2`` rounds each level count to the nearest power of two, so two
+    profiles land in the same bucket iff every level agrees within a
+    factor of ~sqrt(2) of a common power of two — and therefore any two
+    same-bucket profiles differ by at most 2x per level, which bounds
+    how far a reused plan's FLOP estimate can drift (the tuner's
+    bucketed-reuse guard leans on this).
+
+    >>> bucket_nnz_levels({0: 1, 1: 100, 2: 1000, 3: 0})
+    {0: 1, 1: 128, 2: 1024, 3: 0}
+    >>> bucket_nnz_levels({1: 100}) == bucket_nnz_levels({1: 170})
+    True
+    >>> bucket_nnz_levels({1: 100}) == bucket_nnz_levels({1: 200})
+    False
+    """
+    if scheme not in BUCKET_SCHEMES:
+        raise ValueError(f"unknown bucketing scheme {scheme!r}; expected "
+                         f"one of {BUCKET_SCHEMES}")
+    out = {}
+    for p, n in nnz_levels.items():
+        n = int(n)
+        out[int(p)] = 0 if n <= 0 else 1 << max(0, round(math.log2(n)))
+    return out
 
 
 def spec_signature(spec: SpTTNSpec) -> str:
@@ -68,7 +113,8 @@ def cache_key(spec: SpTTNSpec,
               device: str | None = None,
               backends: tuple[str, ...] = ("xla",),
               mesh: Mapping | None = None,
-              blocks: tuple[int, ...] | None = None) -> str:
+              blocks: tuple[int, ...] | None = None,
+              profile: str = "exact") -> str:
     """``backends`` is the tuner's engine search axis: a plan tuned under
     a forced/narrower axis (e.g. ``("pallas",)``) must never be served to
     a search over a different axis, so the axis is part of the key.
@@ -88,6 +134,14 @@ def cache_key(spec: SpTTNSpec,
     ``None`` (the default single-point grid) hashes distinctly from any
     explicit grid.
 
+    ``profile`` names how ``nnz_levels`` was quantized (DESIGN.md §9):
+    ``"exact"`` is the classic per-pattern key; a bucketing scheme name
+    (see :func:`bucket_nnz_levels`) marks a serving-stream key whose
+    profile has already been bucketed — the caller passes the *bucketed*
+    levels.  Keeping the scheme in the hashed document means an exact
+    winner and a bucketed winner can never collide, even when the
+    bucketed profile happens to equal some exact one.
+
     >>> from repro.core import spec as S
     >>> spec = S.mttkrp(8, 6, 5, 4)
     >>> levels = {0: 1, 1: 8, 2: 20, 3: 40}
@@ -98,6 +152,10 @@ def cache_key(spec: SpTTNSpec,
     >>> single == shard0
     False
     >>> single == cache_key(spec, levels, "cpu:x", blocks=(128, 256))
+    False
+    >>> bucketed = cache_key(spec, bucket_nnz_levels(levels), "cpu:x",
+    ...                      profile="log2")
+    >>> single == bucketed
     False
     >>> len(single)
     64
@@ -111,9 +169,34 @@ def cache_key(spec: SpTTNSpec,
         "backends": list(backends),
         "mesh": None if mesh is None else dict(mesh),
         "blocks": None if blocks is None else [int(b) for b in blocks],
+        "profile": str(profile),
     }
     blob = json.dumps(doc, sort_keys=True).encode()
     return hashlib.sha256(blob).hexdigest()
+
+
+def bucketed_cache_key(spec: SpTTNSpec,
+                       nnz_levels: Mapping[int, int],
+                       device: str | None = None,
+                       backends: tuple[str, ...] = ("xla",),
+                       mesh: Mapping | None = None,
+                       blocks: tuple[int, ...] | None = None,
+                       scheme: str = "log2") -> str:
+    """The serving-stream key (DESIGN.md §9): :func:`cache_key` over the
+    *bucketed* profile, with the scheme recorded in the hashed document.
+    Two perturbed patterns whose per-level counts round to the same
+    buckets share this key — and therefore one tuned plan.
+
+    >>> from repro.core import spec as S
+    >>> spec = S.mttkrp(8, 6, 5, 4)
+    >>> a = bucketed_cache_key(spec, {0: 1, 1: 8, 2: 20, 3: 40}, "cpu:x")
+    >>> b = bucketed_cache_key(spec, {0: 1, 1: 8, 2: 22, 3: 37}, "cpu:x")
+    >>> a == b
+    True
+    """
+    return cache_key(spec, bucket_nnz_levels(nnz_levels, scheme), device,
+                     backends=backends, mesh=mesh, blocks=blocks,
+                     profile=scheme)
 
 
 @dataclasses.dataclass

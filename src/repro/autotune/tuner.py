@@ -16,7 +16,8 @@ import dataclasses
 import time
 from typing import Mapping
 
-from repro.autotune.cache import PlanCache, cache_key, device_kind
+from repro.autotune.cache import (PlanCache, bucket_nnz_levels,
+                                  bucketed_cache_key, cache_key, device_kind)
 from repro.autotune.candidates import (Candidate, default_nnz_levels,
                                        generate_candidates)
 from repro.autotune.measure import (MeasureConfig, measure_candidates,
@@ -50,6 +51,16 @@ class TunerConfig:
     kernels that won.  ``None`` means the single-point default grid
     ``(DEFAULT_BLOCK,)`` — block sweeping costs measurements, so opting
     into a wider grid is explicit, like forcing a backend axis.
+
+    ``profile_bucket`` opts the search into the serving hot path
+    (DESIGN.md §9): on an exact-key miss, a plan tuned for a *bucketed*
+    profile (:func:`repro.autotune.cache.bucket_nnz_levels`) is reused
+    when its FLOP estimate on the true profile stays within
+    ``bucket_tolerance`` × the estimate it was tuned at — otherwise the
+    bucket entry is ignored and a fresh search runs.  A fresh winner is
+    persisted under both the exact and the bucketed key, so a stream of
+    perturbed patterns pays one search, not one per pattern.  ``None``
+    (the default) keeps the classic exact-only behavior.
     """
 
     max_paths: int | None = 16
@@ -64,6 +75,8 @@ class TunerConfig:
     backends: tuple[str, ...] | None = None
     mesh: Mapping | None = None
     blocks: tuple[int, ...] | None = None
+    profile_bucket: str | None = None    # e.g. "log2" (serving streams)
+    bucket_tolerance: float = 4.0        # replan when est. cost drifts past
 
 
 def default_backends() -> tuple[str, ...]:
@@ -86,6 +99,10 @@ class SearchStats:
 
     cache_hit: bool = False
     cache_key: str = ""
+    bucket_hit: bool = False      # served from a bucketed entry (§9 guard ok)
+    bucket_key: str = ""          # bucketed key consulted ("" = bucketing off)
+    bucket_est_flops: float | None = None   # reused plan's cost on the true
+                                            # profile (guard's left-hand side)
     candidates_generated: int = 0
     candidates_timed: int = 0
     executions: int = 0
@@ -93,6 +110,25 @@ class SearchStats:
     search_seconds: float = 0.0
     best_seconds: float | None = None
     model_seconds: float | None = None   # measured time of the model's pick
+
+
+def _bucket_reuse_ok(plan, spec: SpTTNSpec, true_levels: Mapping[int, int],
+                     config: TunerConfig, stats: "SearchStats") -> bool:
+    """Cost-model guard for bucketed reuse (DESIGN.md §9).
+
+    A bucketed entry was tuned for *some* same-bucket profile, not this
+    one.  Reuse is safe only while the plan's sparse-aware FLOP estimate
+    on the true profile stays within ``bucket_tolerance`` × the estimate
+    it was tuned at (``plan.flops``) — log2 buckets bound per-level drift
+    by 2x, so a sound entry passes any tolerance ≥ 2; a stale or foreign
+    entry whose profile diverged (e.g. the bucketing scheme coarsened)
+    fails and forces a replan instead of silently executing a bad nest.
+    """
+    from repro.core.cost import path_flops
+    est_true = path_flops(plan.path, spec.dims, spec.sparse_indices,
+                          dict(true_levels))
+    stats.bucket_est_flops = est_true
+    return est_true <= config.bucket_tolerance * max(plan.flops, 1.0)
 
 
 def tune(spec: SpTTNSpec,
@@ -138,15 +174,30 @@ def tune(spec: SpTTNSpec,
 
     backends = config.backends or default_backends()
     cache = PlanCache(cache_dir) if cache_dir else None
-    key = cache_key(spec, levels, device_kind(), backends=backends,
+    device = device_kind()
+    key = cache_key(spec, levels, device, backends=backends,
                     mesh=config.mesh, blocks=config.blocks)
     stats.cache_key = key
+    bkey = None
+    if config.profile_bucket is not None:
+        bkey = bucketed_cache_key(spec, levels, device, backends=backends,
+                                  mesh=config.mesh, blocks=config.blocks,
+                                  scheme=config.profile_bucket)
+        stats.bucket_key = bkey
     if cache is not None:
-        hit = cache.get(key)
+        hit = cache.get(key)         # exact-key fast path
         if hit is not None:
             stats.cache_hit = True
             stats.search_seconds = time.perf_counter() - t_start
             return hit, stats
+        if bkey is not None:
+            hit = cache.get(bkey)
+            if hit is not None and _bucket_reuse_ok(hit, spec, levels,
+                                                    config, stats):
+                stats.cache_hit = True
+                stats.bucket_hit = True
+                stats.search_seconds = time.perf_counter() - t_start
+                return hit, stats
 
     # --- model-side pruning ------------------------------------------- #
     # generate_candidates ranks by TreeCost.evaluate (the ground-truth
@@ -196,12 +247,12 @@ def tune(spec: SpTTNSpec,
                      if best.candidate.backend == "pallas" else None)
 
     if cache is not None:
-        cache.put(key, plan, meta={
+        meta = {
             "best_seconds": best.seconds,
             "model_seconds": stats.model_seconds,
             "candidates_timed": stats.candidates_timed,
             "executions": stats.executions,
-            "device": device_kind(),
+            "device": device,
             "backends": list(backends),
             "mesh": None if config.mesh is None else dict(config.mesh),
             "timings": [
@@ -211,7 +262,16 @@ def tune(spec: SpTTNSpec,
                  "fused": m.candidate.fused,
                  "block": m.candidate.block}
                 for m in results],
-        })
+        }
+        cache.put(key, plan, meta=meta)
+        if bkey is not None:
+            # the serving-stream entry: last same-bucket winner serves the
+            # whole bucket (guarded on read, so "last" is safe)
+            cache.put(bkey, plan, meta=dict(
+                meta, profile_bucket=config.profile_bucket,
+                nnz_levels={str(k): int(v) for k, v in sorted(
+                    bucket_nnz_levels(levels,
+                                      config.profile_bucket).items())}))
 
     stats.search_seconds = time.perf_counter() - t_start
     return plan, stats

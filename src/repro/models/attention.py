@@ -46,8 +46,18 @@ def gqa_init(key, cfg: ModelConfig, dtype):
 
 
 def _mask(Tq: int, Tk: int, q_off, window: int | None):
-    qpos = q_off + jnp.arange(Tq)[:, None]
-    kpos = jnp.arange(Tk)[None, :]
+    """Causal(-windowed) mask; ``q_off`` is the position of query row 0.
+
+    A scalar offset (shared decode position / prefill) yields a (Tq, Tk)
+    mask; a per-row offset vector (B,) — the continuous-batching server,
+    where every slot sits at its own depth — yields (B, Tq, Tk)."""
+    q_off = jnp.asarray(q_off)
+    if q_off.ndim == 1:
+        qpos = q_off[:, None, None] + jnp.arange(Tq)[None, :, None]
+        kpos = jnp.arange(Tk)[None, None, :]
+    else:
+        qpos = q_off + jnp.arange(Tq)[:, None]
+        kpos = jnp.arange(Tk)[None, :]
     m = kpos <= qpos
     if window is not None:
         m &= kpos > qpos - window
@@ -55,17 +65,33 @@ def _mask(Tq: int, Tk: int, q_off, window: int | None):
 
 
 def _sdpa(q, k, v, mask, scale):
-    # q: (B,Tq,H,D), k/v: (B,Tk,Hkv,D) — grouped heads broadcast
+    # q: (B,Tq,H,D), k/v: (B,Tk,Hkv,D) — grouped heads broadcast;
+    # mask is (Tq,Tk) shared or (B,Tq,Tk) per-row (per-slot decode)
     B, Tq, H, D = q.shape
     Hkv = k.shape[2]
     G = H // Hkv
     qh = q.reshape(B, Tq, Hkv, G, D)
     logits = jnp.einsum("bqhgd,bkhd->bhgqk", qh.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
-    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    m = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+    logits = jnp.where(m, logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
     return out.reshape(B, Tq, H, D)
+
+
+def _cache_write(cache_leaf, new, update_slice):
+    """Write a (B, T, ...) update into the sequence axis of a cache leaf.
+
+    Scalar ``update_slice``: one shared offset (prefill, lockstep decode).
+    Vector (B,): per-row offsets — each batch row lands at its own
+    position (requires T == 1, the decode step)."""
+    if getattr(update_slice, "ndim", 0) == 1:
+        B = cache_leaf.shape[0]
+        return cache_leaf.at[jnp.arange(B), update_slice].set(
+            new[:, 0].astype(cache_leaf.dtype))
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache_leaf, new.astype(cache_leaf.dtype), update_slice, axis=1)
 
 
 def gqa_apply(p, cfg: ModelConfig, x, positions, window=None,
@@ -100,21 +126,25 @@ def gqa_apply(p, cfg: ModelConfig, x, positions, window=None,
             # all resident positions are inside the window by construction,
             # only warm-up slots (pos < 0) need masking.
             slot = jnp.mod(update_slice, S)
-            kc = jax.lax.dynamic_update_slice_in_dim(
-                cache.k, k.astype(cache.k.dtype), slot, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(
-                cache.v, v.astype(cache.v.dtype), slot, axis=1)
+            kc = _cache_write(cache.k, k, slot)
+            vc = _cache_write(cache.v, v, slot)
             s_idx = jnp.arange(S)[None, :]
-            slot_pos = update_slice - jnp.mod(update_slice - s_idx, S)
-            mask = (slot_pos >= 0) & (slot_pos > update_slice - window)
-            out = _sdpa(q, kc.astype(q.dtype), vc.astype(q.dtype),
-                        jnp.broadcast_to(mask, (T, S)), scale)
+            if getattr(update_slice, "ndim", 0) == 1:
+                us = update_slice[:, None]            # (B, 1)
+                slot_pos = us - jnp.mod(us - s_idx, S)
+                mask = ((slot_pos >= 0)
+                        & (slot_pos > us - window))[:, None, :]  # (B,T=1,S)
+            else:
+                slot_pos = update_slice - jnp.mod(update_slice - s_idx, S)
+                mask = jnp.broadcast_to(
+                    (slot_pos >= 0) & (slot_pos > update_slice - window),
+                    (T, S))
+            out = _sdpa(q, kc.astype(q.dtype), vc.astype(q.dtype), mask,
+                        scale)
             new_cache = KVCache(k=kc, v=vc)
         else:
-            kc = jax.lax.dynamic_update_slice_in_dim(
-                cache.k, k.astype(cache.k.dtype), update_slice, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(
-                cache.v, v.astype(cache.v.dtype), update_slice, axis=1)
+            kc = _cache_write(cache.k, k, update_slice)
+            vc = _cache_write(cache.v, v, update_slice)
             # causal-within-prompt: query row t sits at update_slice + t
             mask = _mask(T, S, update_slice, window)
             out = _sdpa(q, kc.astype(q.dtype), vc.astype(q.dtype), mask,
@@ -180,8 +210,7 @@ def mla_apply_absorbed(p, cfg: ModelConfig, x, positions, cache: KVCache,
     k_rope_new = L.apply_rope(kv_a[..., None, m.kv_lora:], positions,
                               cfg.rope_theta)[..., 0, :]
     lat_cat = jnp.concatenate([latent_new, k_rope_new], -1)
-    lat_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache.k, lat_cat.astype(cache.k.dtype), update_slice, axis=1)
+    lat_cache = _cache_write(cache.k, lat_cat, update_slice)
     new_cache = KVCache(k=lat_cache, v=cache.v)
     S = lat_cache.shape[1]
     lat_all = lat_cache.astype(q.dtype)
@@ -200,7 +229,8 @@ def mla_apply_absorbed(p, cfg: ModelConfig, x, positions, cache: KVCache,
           + jnp.einsum("bthd,bsd->bhts", q_rope.astype(jnp.float32),
                        krope_all.astype(jnp.float32))) * scale
     mask = _mask(T, S, update_slice, None)
-    lg = jnp.where(mask[None, None], lg, NEG_INF)
+    lg = jnp.where(mask[:, None] if mask.ndim == 3 else mask[None, None],
+                   lg, NEG_INF)
     pr = jax.nn.softmax(lg, axis=-1)
     ctx_lat = jnp.einsum("bhts,bsl->bthl", pr.astype(latent_all.dtype),
                          latent_all)                    # (B,1,H,kv_lora)
@@ -233,8 +263,7 @@ def mla_apply(p, cfg: ModelConfig, x, positions,
     lat_cat = jnp.concatenate([latent, k_rope[..., 0, :]], -1)
 
     if cache is not None:
-        lat_cat = jax.lax.dynamic_update_slice_in_dim(
-            cache.k, lat_cat.astype(cache.k.dtype), update_slice, axis=1)
+        lat_cat = _cache_write(cache.k, lat_cat, update_slice)
         new_cache = KVCache(k=lat_cat, v=cache.v)
         S = lat_cat.shape[1]
         mask = _mask(T, S, update_slice, None)
@@ -253,7 +282,8 @@ def mla_apply(p, cfg: ModelConfig, x, positions,
                      k_nope.astype(jnp.float32))
           + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
                        krope_all.astype(jnp.float32))) * scale
-    lg = jnp.where(mask[None, None], lg, NEG_INF)
+    lg = jnp.where(mask[:, None] if mask.ndim == 3 else mask[None, None],
+                   lg, NEG_INF)
     pr = jax.nn.softmax(lg, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", pr.astype(v.dtype), v)
     y = L.dense(p["o"], out.reshape(B, T, H * m.v_head_dim))

@@ -413,8 +413,10 @@ def init_cache(cfg: ModelConfig, B: int, S: int, dtype=None,
 
 def decode_step(p, cfg: ModelConfig, caches, tokens, pos, enc_out=None,
                 unroll: bool = False):
-    """One token step: tokens (B, 1), pos scalar int32 position.
-    Returns (logits (B,1,V), new_caches)."""
+    """One token step: tokens (B, 1), pos int32 position — a scalar when
+    every row decodes in lockstep, or a per-row vector (B,) when rows sit
+    at different depths (the continuous-batching server with mixed-length
+    prompts).  Returns (logits (B,1,V), new_caches)."""
     table = p["embed"]["w"]
     if tokens.size >= table.shape[0]:
         table = replicate(table)
@@ -422,7 +424,9 @@ def decode_step(p, cfg: ModelConfig, caches, tokens, pos, enc_out=None,
     if cfg.emb_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     B = tokens.shape[0]
-    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = (pos[:, None] if pos.ndim == 1
+                 else jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32))
     plan = layer_plan(cfg, decoder=True)
     x, new_caches, _ = _stack_apply(p["dec"], cfg, plan, x, positions,
                                     caches=caches, update_slice=pos,

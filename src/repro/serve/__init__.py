@@ -1,4 +1,6 @@
 from repro.serve import serve_step
-from repro.serve.serve_step import Server
+from repro.serve.serve_step import (PlanService, Request, Server, ServeStats,
+                                    moe_dispatch_spec, moe_routing_coo)
 
-__all__ = ["serve_step", "Server"]
+__all__ = ["serve_step", "Server", "Request", "PlanService", "ServeStats",
+           "moe_dispatch_spec", "moe_routing_coo"]

@@ -1,12 +1,23 @@
-"""Serving runtime: batched prefill + decode with slot-based continuous
-batching.  A fixed pool of B slots holds independent sequences; finished
-slots are refilled from the queue without stopping the decode loop (the
-static-shape analogue of continuous batching — slot count and cache length
-never change, so one compiled decode_step serves the whole run)."""
+"""Serving runtime (DESIGN.md §9): batched prefill + decode with slot-based
+continuous batching, plus the SpTTN plan-cache hot path.
+
+:class:`Server` holds a fixed pool of B slots of independent sequences;
+finished slots are refilled from the queue without stopping the decode loop
+(the static-shape analogue of continuous batching — slot count and cache
+length never change, so one compiled decode_step serves the whole run).
+
+:class:`PlanService` is the serving-side owner of the autotuner stack: it
+resolves every incoming sparsity pattern to a tuned plan through three
+tiers — exact-key hit, bucketed-profile hit (guarded by the cost model),
+cold autotune — and executes MoE dispatch through the winner.  A stream of
+perturbed routing patterns pays ONE search, then runs hot.
+"""
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Callable
+import time
+from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
@@ -15,6 +26,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.transformer import decode_step, init_cache, prefill
+from repro.sparse.coo import COOTensor, from_coords
+from repro.sparse.csf import CSFTensor, build_csf, build_csf_batch
 
 
 @dataclasses.dataclass
@@ -38,17 +51,21 @@ class Server:
         self.caches = init_cache(cfg, slots, cache_len)
         self.pos = np.zeros(slots, np.int32)
         self.active: list[Request | None] = [None] * slots
-        self.queue: list[Request] = []
+        self.queue: collections.deque[Request] = collections.deque()
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
 
     def submit(self, req: Request):
+        if len(req.prompt) > self.cache_len:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} exceeds cache_len "
+                f"{self.cache_len}; raise cache_len or truncate the prompt")
         self.queue.append(req)
 
     def _fill_slot(self, s: int):
         if not self.queue:
             return
-        req = self.queue.pop(0)
+        req = self.queue.popleft()
         T = len(req.prompt)
         batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
         logits, caches1 = prefill(self.params, self.cfg, batch,
@@ -61,42 +78,210 @@ class Server:
         self.active[s] = req
         self.pos[s] = T
 
-    def step(self):
-        """One decode step across all active slots."""
-        for s in range(self.slots):
-            if self.active[s] is None:
-                self._fill_slot(s)
+    def _sweep(self, finished: list[Request]):
+        """Retire every slot whose request reached max_new."""
+        for s, req in enumerate(self.active):
+            if req is not None and len(req.out) >= req.max_new:
+                req.done = True
+                finished.append(req)
+                self.active[s] = None
+
+    def step(self) -> list[Request]:
+        """One decode step across all active slots; returns the requests
+        that finished during this step (including ones done straight out
+        of prefill — max_new=1 never reaches the decode at all)."""
+        finished: list[Request] = []
+        while True:
+            for s in range(self.slots):
+                if self.active[s] is None:
+                    self._fill_slot(s)
+            n = len(finished)
+            self._sweep(finished)
+            # a sweep that freed slots may admit more queued work before
+            # the (expensive) decode launch; loop until admission settles
+            if len(finished) == n or not self.queue:
+                break
+        if all(a is None for a in self.active):
+            return finished
         toks = np.zeros((self.slots, 1), np.int32)
         for s, req in enumerate(self.active):
             if req is not None and req.out:
                 toks[s, 0] = req.out[-1]
-        # all slots share one position counter per step in this reference
-        # implementation: use per-slot position via max (static-shape safe)
-        pos = int(self.pos.max()) if self.pos.max() > 0 else 0
+        # per-slot positions: each sequence decodes at its own depth, so
+        # mixed-length prompts read/write the right cache rows
         logits, self.caches = self._decode(
             self.params, self.caches, jnp.asarray(toks),
-            jnp.asarray(pos, jnp.int32))
+            jnp.asarray(self.pos))
         nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
         for s, req in enumerate(self.active):
             if req is None:
                 continue
             req.out.append(int(nxt[s]))
             self.pos[s] += 1
-            if len(req.out) >= req.max_new:
-                req.done = True
-                self.active[s] = None
+        self._sweep(finished)
+        return finished
 
     def run(self, max_steps: int = 64) -> list[Request]:
         finished = []
         for _ in range(max_steps):
             if not self.queue and all(a is None for a in self.active):
                 break
-            before = [a for a in self.active]
-            self.step()
-            for a in before:
-                if a is not None and a.done:
-                    finished.append(a)
+            finished.extend(self.step())
         return finished
+
+
+# --------------------------------------------------------------------------- #
+# SpTTN plan-cache hot path (DESIGN.md §9)
+# --------------------------------------------------------------------------- #
+def moe_routing_coo(idx: np.ndarray, n_experts: int,
+                    capacity: int) -> COOTensor:
+    """The MoE routing tensor D(t, e, c) as a sparse COO pattern.
+
+    Numpy mirror of :func:`repro.models.moe._slot_positions`: capacity
+    slots are assigned in token order per expert (dropless inference
+    semantics — overflow drops trailing choices), so the pattern matches
+    what the fused grouped dispatch executes.
+
+    >>> D = moe_routing_coo(np.array([[0, 1], [1, 0], [1, 1]]), 2, 2)
+    >>> D.shape, D.nnz           # third token's duplicate expert overflows
+    ((3, 2, 2), 5)
+    """
+    idx = np.asarray(idx)
+    N, k = idx.shape
+    flat = idx.reshape(-1).astype(np.int64)
+    order = np.argsort(flat, kind="stable")
+    counts = np.bincount(flat, minlength=n_experts)
+    starts = np.cumsum(counts) - counts
+    rank = np.empty(flat.shape[0], np.int64)
+    rank[order] = np.arange(flat.shape[0]) - starts[flat[order]]
+    keep = rank < capacity
+    coords = np.stack([np.repeat(np.arange(N), k)[keep],
+                       flat[keep], rank[keep]], axis=1).astype(np.int32)
+    values = np.ones(int(keep.sum()), np.float32)
+    return from_coords(coords, values, (N, n_experts, capacity),
+                       sum_duplicates=False)
+
+
+def moe_dispatch_spec(n_tokens: int, n_experts: int, capacity: int,
+                      d_model: int):
+    """SpTTN spec of MoE dispatch  Xe(e,c,d) = sum_t D(t,e,c) * X(t,d)."""
+    from repro.core.spec import parse
+    return parse("tec,td->ecd",
+                 dims={"t": n_tokens, "e": n_experts, "c": capacity,
+                       "d": d_model}, sparse=0, names=["D", "X"])
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """How one request's plan was resolved (assertable by tests/benches)."""
+
+    kind: str            # "cold" (fresh search) | "exact" | "bucket"
+    key: str             # exact cache key of the request's true profile
+    bucket_key: str      # bucketed key consulted ("" = bucketing off)
+    seconds: float       # plan-resolution wall-clock (search or lookup)
+
+
+class PlanService:
+    """Serving-side owner of the plan cache, bucketer, and executors.
+
+    Request flow per pattern (DESIGN.md §9):
+
+    1. exact key in the in-process plan map  -> "exact" (no disk, no model)
+    2. bucketed key in the in-process map, and the cost-model guard admits
+       the plan on the request's true profile -> "bucket"
+    3. :func:`repro.autotune.tuner.tune` with ``cache_dir`` — which itself
+       checks the exact and bucketed *disk* entries before searching ->
+       "exact"/"bucket" (disk hit) or "cold" (fresh search, persisted
+       under both keys for every later request in the bucket)
+
+    Execution is eager (no jit): perturbed patterns change array sizes
+    every request, so a compiled path would retrace per pattern — the
+    opposite of a hot path.
+    """
+
+    def __init__(self, cache_dir: str | None = None, config=None):
+        from repro.autotune.tuner import TunerConfig
+        self.cache_dir = cache_dir
+        self.config = config or TunerConfig(
+            profile_bucket="log2", max_paths=4, max_candidates=4,
+            orders_per_path=1, warmup=0, repeats=1)
+        self.stats: list[ServeStats] = []
+        self._plans: dict = {}          # exact key -> plan
+        self._bucket_plans: dict = {}   # bucketed key -> plan
+        self._executors: dict = {}      # plan json -> engine instance
+
+    def plan_for(self, spec, csf: CSFTensor):
+        """Resolve (spec, pattern) to a tuned plan; returns (plan, stats)."""
+        from repro.autotune import tuner as T
+        from repro.autotune.cache import (bucketed_cache_key, cache_key,
+                                          device_kind)
+        t0 = time.perf_counter()
+        levels = csf.nnz_levels()
+        device = device_kind()
+        backends = self.config.backends or T.default_backends()
+        key = cache_key(spec, levels, device, backends=backends,
+                        mesh=self.config.mesh, blocks=self.config.blocks)
+        bkey = ""
+        if self.config.profile_bucket is not None:
+            bkey = bucketed_cache_key(
+                spec, levels, device, backends=backends,
+                mesh=self.config.mesh, blocks=self.config.blocks,
+                scheme=self.config.profile_bucket)
+        if key in self._plans:
+            plan, kind = self._plans[key], "exact"
+        elif bkey and bkey in self._bucket_plans and T._bucket_reuse_ok(
+                self._bucket_plans[bkey], spec, levels, self.config,
+                T.SearchStats()):
+            plan, kind = self._bucket_plans[bkey], "bucket"
+            self._plans[key] = plan   # promote: next time it's an exact hit
+        else:
+            plan, tstats = T.tune(spec, csf=csf, cache_dir=self.cache_dir,
+                                  config=self.config)
+            kind = ("bucket" if tstats.bucket_hit
+                    else "exact" if tstats.cache_hit else "cold")
+            self._plans[key] = plan
+            if bkey:
+                self._bucket_plans[bkey] = plan
+        st = ServeStats(kind=kind, key=key, bucket_key=bkey,
+                        seconds=time.perf_counter() - t0)
+        self.stats.append(st)
+        return plan, st
+
+    def _executor_for(self, plan):
+        from repro.core.executor import make_executor, plan_to_json
+        pkey = plan_to_json(plan)
+        ex = self._executors.get(pkey)
+        if ex is None:
+            kwargs = {}
+            if plan.backend == "pallas":
+                if plan.fused:
+                    kwargs["strategy"] = "fused"
+                if plan.block:
+                    kwargs["block"] = plan.block
+            ex = make_executor(plan.spec, plan.path, plan.order,
+                               backend=plan.backend, **kwargs)
+            self._executors[pkey] = ex
+        return ex
+
+    def dispatch(self, routing: "COOTensor | CSFTensor", x):
+        """MoE dispatch Xe(e,c,d) = sum_t D(t,e,c) X(t,d) through a tuned
+        plan; returns (Xe as a jnp array, ServeStats)."""
+        from repro.core.executor import CSFArrays
+        csf = routing if isinstance(routing, CSFTensor) else \
+            build_csf(routing)
+        N, E, C = csf.shape
+        spec = moe_dispatch_spec(N, E, C, int(np.shape(x)[-1]))
+        plan, st = self.plan_for(spec, csf)
+        ex = self._executor_for(plan)
+        out = ex(CSFArrays.from_csf(csf), {"X": jnp.asarray(x)})
+        return out, st
+
+    def dispatch_batch(self, routings: Sequence[COOTensor], xs):
+        """Batched request path: one amortized CSF construction pass
+        (:func:`repro.sparse.csf.build_csf_batch`), then per-request plan
+        resolution + dispatch.  Returns a list of (output, stats)."""
+        csfs = build_csf_batch(list(routings))
+        return [self.dispatch(csf, x) for csf, x in zip(csfs, xs)]
 
 
 def _splice(pool, one, s: int):

@@ -1,5 +1,5 @@
 from repro.sparse.coo import COOTensor, random_sparse, from_dense
-from repro.sparse.csf import CSFTensor, build_csf
+from repro.sparse.csf import CSFTensor, build_csf, build_csf_batch
 
 __all__ = ["COOTensor", "random_sparse", "from_dense", "CSFTensor",
-           "build_csf"]
+           "build_csf", "build_csf_batch"]

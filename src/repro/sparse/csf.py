@@ -100,6 +100,79 @@ def build_csf(coo: COOTensor) -> CSFTensor:
     return CSFTensor(coo=coo, coord=coord, parent=parent, seg=seg, nfib=nfib)
 
 
+def build_csf_batch(coos: "list[COOTensor] | tuple[COOTensor, ...]"
+                    ) -> list[CSFTensor]:
+    """Amortized CSF construction for a *request batch* (DESIGN.md §9).
+
+    A serving stream hands over many small same-order patterns per step
+    (MoE routing masks, per-user masks); building each CSF separately pays
+    the fixed numpy dispatch cost of every level pass B times.  This
+    builder concatenates the batch with a leading batch-id column — each
+    member is already lexicographically sorted, so the concatenation is
+    sorted too and needs no re-sort — runs the per-level prefix-change
+    scan ONCE over the whole stream, and splits the global fiber arrays
+    back per member.  Results are exactly ``[build_csf(c) for c in coos]``
+    (tested element-for-element); only the constant factor changes.
+    """
+    if not coos:
+        return []
+    order = coos[0].order
+    if any(c.order != order for c in coos):
+        raise ValueError("batched CSF construction needs same-order tensors")
+    sizes = [c.nnz for c in coos]
+    offsets = np.concatenate([[0], np.cumsum(sizes)])
+    total = int(offsets[-1])
+    if total == 0:
+        return [build_csf(c) for c in coos]
+    # batch-id column in front keeps the concatenation lexicographic and
+    # forces a fiber break at every member boundary at every level
+    ext = np.empty((total, order + 1), dtype=np.int32)
+    ext[:, 0] = np.repeat(np.arange(len(coos), dtype=np.int32), sizes)
+    ext[:, 1:] = np.concatenate(
+        [c.coords for c in coos if c.nnz], axis=0)
+    per = [
+        {"coord": {}, "parent": {}, "seg": {}, "nfib": {}}
+        for _ in coos]
+    # level-0: one root fiber per member, globally numbered by batch id
+    prev_seg = ext[:, 0].copy()
+    prev_offsets = np.arange(len(coos), dtype=np.int64)
+    nnz_member = ext[:, 0]                       # member id per nonzero
+    for p in range(1, order + 1):
+        changed = np.zeros(total, dtype=bool)
+        changed[0] = True
+        # prefix includes the batch column, so member boundaries always cut
+        changed[1:] = np.any(ext[1:, :p + 1] != ext[:-1, :p + 1], axis=1)
+        fib_id = np.cumsum(changed) - 1
+        starts = np.flatnonzero(changed)
+        fib_member = nnz_member[starts]          # member id per fiber
+        fib_offsets = np.searchsorted(starts, offsets[:-1])
+        # re-base every global id to its member's range in ONE pass, then
+        # split into views — no per-member arithmetic
+        coord_all = ext[starts, p].astype(np.int32)
+        parent_all = (prev_seg[starts]
+                      - prev_offsets[fib_member]).astype(np.int32)
+        seg_all = (fib_id - fib_offsets[nnz_member]).astype(np.int32)
+        coords = np.split(coord_all, fib_offsets[1:])
+        parents = np.split(parent_all, fib_offsets[1:])
+        segs = np.split(seg_all, offsets[1:-1])
+        for b, d in enumerate(per):
+            d["coord"][p] = coords[b]
+            d["parent"][p] = parents[b]
+            d["seg"][p] = segs[b]
+            d["nfib"][p] = len(coords[b])
+        prev_seg = fib_id
+        prev_offsets = fib_offsets.astype(np.int64)
+    out = []
+    for b, c in enumerate(coos):
+        if c.nnz == 0:
+            out.append(build_csf(c))  # empty arrays, canonical layout
+            continue
+        d = per[b]
+        out.append(CSFTensor(coo=c, coord=d["coord"], parent=d["parent"],
+                             seg=d["seg"], nfib=d["nfib"]))
+    return out
+
+
 def level_segments(csf: CSFTensor, child: int, parentlvl: int) -> np.ndarray:
     """Segment ids mapping level-``child`` fibers to level-``parentlvl``
     fibers (child > parentlvl).  parentlvl=0 maps everything to one root."""

@@ -325,7 +325,7 @@ def test_cached_plan_meta_records_backends(tmp_path):
     with open(tmp_path / files[0]) as f:
         doc = json.load(f)
     assert doc["plan"]["version"] == 5
-    assert doc["cache_version"] == 5
+    assert doc["cache_version"] == 6
     assert set(doc["meta"]["backends"]) == {"xla", "pallas"}
     assert all("backend" in t and "fused" in t and "block" in t
                for t in doc["meta"]["timings"])

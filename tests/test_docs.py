@@ -22,6 +22,7 @@ MARKDOWN_WITH_DOCTESTS = [
     "docs/plan-format.md",
     "docs/distributed.md",
     "docs/cost-models.md",
+    "docs/serving.md",
 ]
 
 # the public API surface whose docstrings carry runnable examples

@@ -354,7 +354,7 @@ def test_cache_version_guard_rejects_doctored_v3_entry(tmp_path):
 
     with open(path) as f:
         doc = json.load(f)
-    assert doc["cache_version"] == CACHE_VERSION == 5
+    assert doc["cache_version"] == CACHE_VERSION == 6
     # doctor the entry back to the v4 era: stale stamp, v4 plan schema
     doc["cache_version"] = 4
     doc["plan"]["version"] = 4

@@ -1,0 +1,264 @@
+"""Serving-path gates (DESIGN.md §9): continuous-batching correctness
+regressions, the plan-cache hot-path tiers, bucketed-reuse guard + parity,
+batched CSF construction, and the bench-gate seeding rule.
+
+Unlike test_sparse.py these tests carry no hypothesis dependency — the
+serving regressions must run everywhere tier-1 runs.
+"""
+import importlib.util
+import json
+import os
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# --------------------------------------------------------------------------- #
+# Server loop regressions
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def small_model():
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import model_init
+    cfg = get_reduced("smollm-135m")
+    params, _ = model_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_server_max_new_one_not_dropped(small_model):
+    """Regression: a request admitted and finished within one step used to
+    be silently dropped (run() snapshotted active before the refill)."""
+    from repro.serve.serve_step import Request, Server
+    cfg, params = small_model
+    srv = Server(cfg, params, slots=2, cache_len=32)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                    max_new=1) for _ in range(3)]
+    for r in reqs:
+        srv.submit(r)
+    done = srv.run(max_steps=16)
+    assert len(done) == 3
+    assert all(r.done and len(r.out) == 1 for r in reqs)
+
+
+def test_server_mixed_length_parity(small_model):
+    """Regression: decode used one shared max() position, so the shorter
+    of two mixed-length prompts attended at the wrong cache rows."""
+    from repro.serve.serve_step import Request, Server
+    cfg, params = small_model
+    rng = np.random.default_rng(1)
+    pa = rng.integers(0, cfg.vocab, 3).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab, 11).astype(np.int32)
+
+    def solo(prompt):
+        srv = Server(cfg, params, slots=2, cache_len=32)
+        srv.submit(Request(prompt=prompt, max_new=6))
+        (req,) = srv.run(max_steps=32)
+        return req.out
+
+    ra, rb = solo(pa), solo(pb)
+    srv = Server(cfg, params, slots=2, cache_len=32)
+    qa = Request(prompt=pa, max_new=6)
+    qb = Request(prompt=pb, max_new=6)
+    srv.submit(qa)
+    srv.submit(qb)
+    done = srv.run(max_steps=32)
+    assert len(done) == 2
+    assert qa.out == ra
+    assert qb.out == rb
+
+
+def test_server_prompt_bound_check(small_model):
+    from repro.serve.serve_step import Request, Server
+    cfg, params = small_model
+    srv = Server(cfg, params, slots=1, cache_len=16)
+    with pytest.raises(ValueError, match="cache_len"):
+        srv.submit(Request(prompt=np.zeros(17, np.int32)))
+
+
+# --------------------------------------------------------------------------- #
+# Plan-cache hot path
+# --------------------------------------------------------------------------- #
+def _routing(N, E, k, C, seed):
+    from repro.serve import moe_routing_coo
+    r = np.random.default_rng(seed)
+    idx = np.argsort(-r.standard_normal((N, E)), axis=1)[:, :k]
+    return moe_routing_coo(idx, E, C)
+
+
+def _service(cache_dir, bucket="log2", **kw):
+    from repro.autotune.tuner import TunerConfig
+    from repro.serve import PlanService
+    cfg = TunerConfig(profile_bucket=bucket, max_paths=2, max_candidates=2,
+                      orders_per_path=1, warmup=0, repeats=1, **kw)
+    return PlanService(cache_dir=cache_dir, config=cfg)
+
+
+N, E, K, C, D = 32, 4, 2, 16, 16
+
+
+def test_plan_service_cache_kinds(tmp_path, monkeypatch):
+    """cold -> bucket -> exact tiers, observed through PlanCache.get/put."""
+    from repro.autotune.cache import PlanCache
+    calls = {"get": 0, "put": 0}
+    real_get, real_put = PlanCache.get, PlanCache.put
+    monkeypatch.setattr(PlanCache, "get", lambda self, key: (
+        calls.__setitem__("get", calls["get"] + 1) or real_get(self, key)))
+    monkeypatch.setattr(PlanCache, "put", lambda self, key, plan, meta=None: (
+        calls.__setitem__("put", calls["put"] + 1)
+        or real_put(self, key, plan, meta=meta)))
+
+    svc = _service(str(tmp_path))
+    x = np.random.default_rng(0).standard_normal((N, D)).astype(np.float32)
+
+    _, st = svc.dispatch(_routing(N, E, K, C, 0), x)
+    assert st.kind == "cold"
+    assert calls["put"] == 2        # persisted under exact AND bucketed key
+    # a perturbed pattern: in-memory bucket tier, no further disk traffic
+    gets_before = calls["get"]
+    _, st = svc.dispatch(_routing(N, E, K, C, 1), x)
+    assert st.kind == "bucket"
+    assert calls["get"] == gets_before
+    # the same pattern again: exact in-memory hit
+    _, st = svc.dispatch(_routing(N, E, K, C, 1), x)
+    assert st.kind == "exact"
+
+    # a FRESH service over the same disk cache: the tuner's disk tiers
+    svc2 = _service(str(tmp_path))
+    _, st = svc2.dispatch(_routing(N, E, K, C, 0), x)
+    assert st.kind == "exact"       # exact disk entry from the cold search
+    _, st = svc2.dispatch(_routing(N, E, K, C, 2), x)
+    assert st.kind == "bucket"      # bucketed disk entry, guard admitted
+
+
+def test_bucket_hit_parity_vs_fresh_tune(tmp_path):
+    """Acceptance: bucket-hit execution matches a freshly tuned plan 1e-5."""
+    x = np.random.default_rng(1).standard_normal((N, D)).astype(np.float32)
+    svc = _service(str(tmp_path / "bucketed"))
+    svc.dispatch(_routing(N, E, K, C, 0), x)          # pays the search
+    fresh = _service(str(tmp_path / "fresh"), bucket=None)
+    for seed in range(1, 5):
+        coo = _routing(N, E, K, C, seed)
+        out, st = svc.dispatch(coo, x)
+        assert st.kind in ("bucket", "exact")
+        ref, fst = fresh.dispatch(coo, x)
+        assert fst.kind in ("cold", "exact")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5)
+        # and both match the dense einsum oracle
+        np.testing.assert_allclose(
+            np.asarray(out),
+            np.einsum("tec,td->ecd", coo.to_dense(), x), atol=1e-4)
+
+
+def test_bucket_guard_forces_replan(tmp_path):
+    """A bucketed entry whose cost estimate fails the tolerance must be
+    ignored — the request replans instead of running a foreign nest."""
+    from repro.core.executor import CSFArrays
+    from repro.sparse import build_csf
+    x = np.random.default_rng(2).standard_normal((N, D)).astype(np.float32)
+    svc = _service(str(tmp_path))
+    svc.dispatch(_routing(N, E, K, C, 0), x)
+    # zero tolerance: every bucketed estimate exceeds it
+    svc_strict = _service(str(tmp_path), bucket_tolerance=1e-9)
+    _, st = svc_strict.dispatch(_routing(N, E, K, C, 1), x)
+    assert st.kind == "cold"
+
+
+def test_plan_cache_two_writer_race(tmp_path):
+    """Atomic publish claim: concurrent put() under one key never leaves a
+    torn entry — get() always parses a complete plan."""
+    from repro.autotune.cache import PlanCache
+    from repro.core.planner import plan
+    from repro.core import spec as S
+    p1 = plan(S.mttkrp(8, 6, 5, 4))
+    p2 = plan(S.mttkrp(8, 6, 5, 4), nnz_levels={0: 1, 1: 8, 2: 24, 3: 48})
+    cache = PlanCache(str(tmp_path))
+    errs = []
+
+    def writer(p, n):
+        try:
+            for _ in range(n):
+                cache.put("contended", p, meta={"w": id(p)})
+        except Exception as e:          # pragma: no cover - fail loudly
+            errs.append(e)
+
+    ts = [threading.Thread(target=writer, args=(p, 25)) for p in (p1, p2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs
+    got = cache.get("contended")
+    assert got is not None and got.path in (p1.path, p2.path)
+    # the entry on disk is complete, valid JSON
+    with open(cache._path("contended")) as f:
+        doc = json.load(f)
+    assert doc["cache_version"] == __import__(
+        "repro.autotune.cache", fromlist=["CACHE_VERSION"]).CACHE_VERSION
+
+
+def test_build_csf_batch_matches_sequential():
+    from repro.sparse import build_csf, build_csf_batch
+    from repro.sparse.coo import random_sparse
+    from repro.sparse.coo import COOTensor
+    coos = [random_sparse((8, 9, 10), d, seed=s)
+            for s, d in enumerate([0.05, 0.2, 0.01, 0.5])]
+    # an empty member mid-batch must round-trip too
+    coos.insert(2, COOTensor(coords=np.zeros((0, 3), np.int32),
+                             values=np.zeros(0, np.float32),
+                             shape=(8, 9, 10)))
+    batch = build_csf_batch(coos)
+    assert len(batch) == len(coos)
+    for c, b in zip(coos, batch):
+        ref = build_csf(c)
+        assert ref.nfib == b.nfib
+        for p in ref.coord:
+            np.testing.assert_array_equal(ref.coord[p], b.coord[p])
+            np.testing.assert_array_equal(ref.parent[p], b.parent[p])
+            np.testing.assert_array_equal(ref.seg[p], b.seg[p])
+
+
+def test_bucketed_key_collapses_perturbed_profiles():
+    from repro.autotune.cache import (bucket_nnz_levels, bucketed_cache_key,
+                                      cache_key)
+    from repro.core import spec as S
+    spec = S.mttkrp(8, 6, 5, 4)
+    a = {0: 1, 1: 8, 2: 20, 3: 40}
+    b = {0: 1, 1: 8, 2: 22, 3: 37}
+    assert cache_key(spec, a, "cpu:x") != cache_key(spec, b, "cpu:x")
+    assert (bucketed_cache_key(spec, a, "cpu:x")
+            == bucketed_cache_key(spec, b, "cpu:x"))
+    # the bucketed key can never collide with an exact key over the same
+    # (already-bucketed) profile: the scheme is part of the hashed doc
+    ab = bucket_nnz_levels(a)
+    assert bucketed_cache_key(spec, a, "cpu:x") != cache_key(
+        spec, ab, "cpu:x")
+
+
+# --------------------------------------------------------------------------- #
+# Bench-gate seeding rule
+# --------------------------------------------------------------------------- #
+def test_bench_regression_new_rows_non_gating(capsys):
+    """A row present only in the new medians (e.g. the serve-latency rows
+    on their first appearance) is reported but never fails the gate."""
+    spec = importlib.util.spec_from_file_location(
+        "check_bench_regression",
+        os.path.join(REPO, "scripts", "check_bench_regression.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    base = {"mttkrp": {"uniform-3d|xla": 100.0}}
+    new = {"mttkrp": {"uniform-3d|xla": 110.0},
+           "serve_latency": {"serve|cold-miss": 313748.9,
+                             "serve|bucket-hit": 5473.5}}
+    assert mod.compare(base, new, threshold=3.0) == 0
+    out = capsys.readouterr().out
+    assert out.count("new row (unchecked)") == 2
+    # ... while a genuine regression on a shared row still fails
+    worse = {"mttkrp": {"uniform-3d|xla": 400.0}}
+    assert mod.compare(base, worse, threshold=3.0) == 1

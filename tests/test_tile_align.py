@@ -296,7 +296,7 @@ def test_tuned_block_persists_and_replays(tmp_path):
     # the meta records every (block, seconds) pair that was measured
     entry = json.loads((tmp_path / f"plan-{stats.cache_key}.json")
                        .read_text())
-    assert entry["cache_version"] == CACHE_VERSION == 5
+    assert entry["cache_version"] == CACHE_VERSION == 6
     assert {t["block"] for t in entry["meta"]["timings"]} == {8, 16}
 
     # execute_plan replays the tuned block on the generated-kernel engine
