@@ -1,0 +1,102 @@
+"""Out-of-core replay (DESIGN.md §10, docs/out-of-core.md): the cost of
+running a tuned plan under a memory budget vs running it unsliced.
+
+Per kernel (MTTKRP and TTMc) the suite reports the unsliced schedule and
+the same schedule replayed at budget = peak/2 and peak/4 — the slicing
+overhead is the extra passes over the sparse operand, so the budgeted
+rows bound what "tensor bigger than HBM" costs on this runtime.  Every
+run asserts the out-of-core contract in-bench: each chunk's footprint
+(tail included) prices at or under the budget, sliced results match
+unsliced to 1e-4, and a budgeted tune leaves exactly ONE unsliced plan
+in the cache (the decision never forks the cache key)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import tempfile
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.autotune import TunerConfig, tune
+from repro.core import spec as S
+from repro.core.executor import CSFArrays, execute_plan, make_executor
+from repro.core.planner import plan
+from repro.core.slicing import (chunk_footprints, plan_peak_bytes,
+                                sliced_execute, stamp_plan_slicing)
+from repro.sparse import build_csf, random_sparse
+
+_SEARCH = dict(max_paths=2, max_candidates=2, orders_per_path=1,
+               warmup=1, repeats=2)
+
+
+def _kernels(scale: float):
+    s = lambda x: max(8, int(x * scale))
+    I, J, K = s(256), s(192), s(128)
+    coo = random_sparse((I, J, K), 2e-3, seed=7)
+    csf = build_csf(coo)
+    rng = np.random.default_rng(0)
+    R = s(64)
+    r2, r3 = s(48), s(24)
+    yield ("mttkrp", S.mttkrp(I, J, K, R), csf, {
+        "B": rng.standard_normal((J, R)).astype(np.float32),
+        "C": rng.standard_normal((K, R)).astype(np.float32)})
+    yield ("ttmc", S.ttmc3(I, J, K, r2, r3), csf, {
+        "U": rng.standard_normal((J, r2)).astype(np.float32),
+        "V": rng.standard_normal((K, r3)).astype(np.float32)})
+
+
+def run(scale: float = 1.0):
+    rows = [("bench", "tensor", "schedule", "us_per_call", "chunks")]
+    for name, spec, csf, factors in _kernels(scale):
+        levels = csf.nnz_levels()
+        p = plan(spec, nnz_levels=levels)
+        arrays = CSFArrays.from_csf(csf)
+        ex = make_executor(spec, p.path, p.order)
+        unsliced = jax.jit(lambda f: ex(arrays, f))
+        t_full = timeit(unsliced, factors)
+        ref = np.asarray(unsliced(factors))
+        rows.append(("outofcore", name, "unsliced",
+                     round(t_full * 1e6, 1), 1))
+
+        peak = plan_peak_bytes(spec, p.path, p.order, levels)
+        for frac, label in ((2, "budget-1/2"), (4, "budget-1/4")):
+            budget = peak // frac
+            stamped = stamp_plan_slicing(p, levels, budget)
+            assert stamped.slice_chunks > 1, (name, label)
+            # the contract, asserted where the numbers are produced:
+            # every chunk (tail included) prices under the budget
+            assert max(chunk_footprints(stamped, levels)) <= budget
+            cache = {}   # chunk executors persist across timed calls
+            fn = lambda f: sliced_execute(stamped, arrays, f,
+                                          executor_cache=cache)
+            t_sliced = timeit(fn, factors)
+            out = np.asarray(fn(factors))
+            tol = 1e-4 * max(1.0, float(np.abs(ref).max()))
+            assert np.allclose(out, ref, atol=tol), (name, label)
+            rows.append(("outofcore", name, label,
+                         round(t_sliced * 1e6, 1), stamped.slice_chunks))
+
+        # one cached plan across chunks: a budgeted measured search
+        # persists exactly one entry, and it is the UNSLICED winner
+        with tempfile.TemporaryDirectory() as d:
+            tuned, _ = tune(spec, csf=csf, factors=factors, cache_dir=d,
+                            tuner=TunerConfig(**_SEARCH),
+                            memory_budget=peak // 2)
+            entries = glob.glob(os.path.join(d, "plan-*.json"))
+            assert len(entries) == 1, entries
+            with open(entries[0]) as f:
+                doc = json.load(f)["plan"]
+            assert doc["slice_mode"] is None and doc["slice_chunks"] == 1
+            out = np.asarray(execute_plan(tuned, arrays, factors))
+            tol = 1e-4 * max(1.0, float(np.abs(ref).max()))
+            assert np.allclose(out, ref, atol=tol), name
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(scale=float(os.environ.get("SCALE", "1.0")))

@@ -54,7 +54,7 @@ def run(stream: int = 32):
 
     # --- cold-miss tier: exact-only keying (pre-§9 behavior) ----------- #
     svc_cold = PlanService(cache_dir=tempfile.mkdtemp(),
-                           config=TunerConfig(profile_bucket=None, **_SEARCH))
+                           tuner=TunerConfig(profile_bucket=None, **_SEARCH))
     cold = []
     for coo in patterns:
         us, _, st = _request_us(svc_cold, coo, x)
@@ -63,7 +63,7 @@ def run(stream: int = 32):
 
     # --- bucket-hit tier: log2 bucketing, one warm-up search ----------- #
     svc = PlanService(cache_dir=tempfile.mkdtemp(),
-                      config=TunerConfig(profile_bucket="log2", **_SEARCH))
+                      tuner=TunerConfig(profile_bucket="log2", **_SEARCH))
     _request_us(svc, _routing(N, E, k, C, 7), x)     # pays the one search
     bucket, outs = [], []
     for coo in patterns:
@@ -82,7 +82,7 @@ def run(stream: int = 32):
 
     # --- 1e-5 parity: bucket-hit execution vs freshly tuned plans ------ #
     fresh = PlanService(cache_dir=tempfile.mkdtemp(),
-                        config=TunerConfig(profile_bucket=None, **_SEARCH))
+                        tuner=TunerConfig(profile_bucket=None, **_SEARCH))
     for coo, out in zip(patterns[:4], outs[:4]):
         ref, _ = fresh.dispatch(coo, x)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),

@@ -50,7 +50,8 @@ def medians(results: dict) -> dict:
 def main() -> int:
     scale = float(os.environ.get("SCALE", "0.5"))
     from benchmarks import (bench_dist, bench_index_order,
-                            bench_moe_dispatch, bench_mttkrp, bench_search,
+                            bench_moe_dispatch, bench_mttkrp,
+                            bench_outofcore, bench_search,
                             bench_serve_latency, bench_strong_scaling,
                             bench_tttc, bench_tttp, bench_ttmc)
 
@@ -66,6 +67,7 @@ def main() -> int:
         ("moe_dispatch", bench_moe_dispatch.run),
         ("dist", lambda: bench_dist.run(scale=scale)),
         ("serve_latency", bench_serve_latency.run),
+        ("outofcore", lambda: bench_outofcore.run(scale=scale)),
     ]
     if os.environ.get("SCALING", "0") == "1":
         suites.append(("strong_scaling", bench_strong_scaling.run))

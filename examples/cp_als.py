@@ -13,11 +13,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import spec as S
-from repro.core.executor import CSFArrays, VectorizedExecutor
-from repro.core.planner import plan
-from repro.sparse import build_csf, random_sparse
-from repro.sparse.coo import COOTensor
+from repro import (COOTensor, CSFArrays, build_csf, make_executor, parse,
+                   plan, random_sparse, tttp3)
 
 
 def cp_als(coo: COOTensor, rank: int, steps: int, seed: int = 0,
@@ -34,7 +31,7 @@ def cp_als(coo: COOTensor, rank: int, steps: int, seed: int = 0,
         perm = (mode,) + tuple(m for m in range(3) if m != mode)
         csf_m = build_csf(coo.permute_modes(perm))
         dims = dict(zip("ijk", csf_m.shape))
-        spec = S.parse("ijk,ja,ka->ia", dims={**dims, "a": rank}, sparse=0,
+        spec = parse("ijk,ja,ka->ia", dims={**dims, "a": rank}, sparse=0,
                        names=["T", "F1", "F2"])
         p = plan(spec, nnz_levels=csf_m.nnz_levels(), autotune=autotune,
                  cache_dir=cache_dir, csf=csf_m)
@@ -42,18 +39,18 @@ def cp_als(coo: COOTensor, rank: int, steps: int, seed: int = 0,
             how = "cache" if p.stats.cache_hit else (
                 f"search ({p.stats.candidates_timed} timed)")
             print(f"mode {name}: plan from {how}", flush=True)
-        ex = VectorizedExecutor(spec, p.path, p.order)
+        ex = make_executor(spec, p.path, p.order)
         arrays = CSFArrays.from_csf(csf_m)
         execs[name] = jax.jit(
             lambda f1, f2, ex=ex, arrays=arrays: ex(
                 arrays, {"F1": f1, "F2": f2}))
 
     # TTTP-style residual on the observed entries
-    spec_r = S.tttp3(I, J, K, rank)
+    spec_r = tttp3(I, J, K, rank)
     csf = build_csf(coo)
     pr = plan(spec_r, nnz_levels=csf.nnz_levels(), autotune=autotune,
               cache_dir=cache_dir, csf=csf)
-    exr = VectorizedExecutor(spec_r, pr.path, pr.order)
+    exr = make_executor(spec_r, pr.path, pr.order)
     arrays_r = CSFArrays.from_csf(csf)
     vals = jnp.asarray(coo.values)
 

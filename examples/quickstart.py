@@ -1,19 +1,23 @@
 """Quickstart: declare an SpTTN kernel, let the planner find the minimum
-cost loop nest, execute it, and inspect the schedule.
+cost loop nest, execute it, and inspect the schedule — all through the
+top-level ``repro`` facade.
 
     PYTHONPATH=src python examples/quickstart.py
+    EX_SCALE=0.1 PYTHONPATH=src python examples/quickstart.py   # CI smoke
 """
+import os
+
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import spec as S
-from repro.core.planner import plan
-from repro.core.executor import CSFArrays, VectorizedExecutor, dense_oracle
-from repro.sparse import build_csf, random_sparse
+from repro import (CSFArrays, build_csf, dense_oracle, execute_plan,
+                   make_executor, mttkrp, plan, plan_peak_bytes,
+                   random_sparse)
 
 # MTTKRP (paper Eq. 1): A(i,a) = sum_jk T(i,j,k) B(j,a) C(k,a)
-I, J, K, R = 256, 128, 64, 32
-spec = S.mttkrp(I, J, K, R)
+SCALE = float(os.environ.get("EX_SCALE", "1.0"))
+I, J, K, R = (max(8, int(n * SCALE)) for n in (256, 128, 64, 32))
+spec = mttkrp(I, J, K, R)
 
 T = random_sparse((I, J, K), density=1e-3, seed=0)
 csf = build_csf(T)
@@ -28,9 +32,18 @@ print(p.describe())
 rng = np.random.default_rng(0)
 factors = {"B": jnp.asarray(rng.standard_normal((J, R)).astype(np.float32)),
            "C": jnp.asarray(rng.standard_normal((K, R)).astype(np.float32))}
-out = VectorizedExecutor(spec, p.path, p.order)(CSFArrays.from_csf(csf),
-                                                factors)
+arrays = CSFArrays.from_csf(csf)
+out = make_executor(spec, p.path, p.order)(arrays, factors)
 oracle = dense_oracle(spec, csf, {k: np.asarray(v)
                                   for k, v in factors.items()})
-print("\nmax |out - dense einsum oracle| =",
-      float(np.abs(np.asarray(out) - oracle).max()))
+err = float(np.abs(np.asarray(out) - oracle).max())
+print("\nmax |out - dense einsum oracle| =", err)
+assert err < 1e-3
+
+# out-of-core replay (docs/out-of-core.md): cap the working set at half
+# the unsliced peak and the same plan streams chunk by chunk, exactly
+peak = plan_peak_bytes(spec, p.path, p.order, csf.nnz_levels())
+sliced = execute_plan(p, arrays, factors, memory_budget=peak // 2)
+print(f"peak working set {peak} B; replayed under {peak // 2} B budget, "
+      f"max delta = {float(np.abs(np.asarray(sliced) - oracle).max()):.2e}")
+assert np.allclose(np.asarray(sliced), np.asarray(out), atol=1e-4)

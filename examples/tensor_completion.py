@@ -8,10 +8,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import spec as S
-from repro.core.executor import CSFArrays, VectorizedExecutor
-from repro.core.planner import plan
-from repro.sparse import build_csf, random_sparse
+from repro import (CSFArrays, build_csf, make_executor, parse, plan,
+                   random_sparse, tttp3)
 
 
 def main(steps: int = 300, rank: int = 12, lr: float = 0.05):
@@ -26,9 +24,9 @@ def main(steps: int = 300, rank: int = 12, lr: float = 0.05):
     arrays = CSFArrays.from_csf(csf)
     obs = jnp.asarray(truth)
 
-    spec = S.tttp3(I, J, K, rank)
+    spec = tttp3(I, J, K, rank)
     p = plan(spec, nnz_levels=csf.nnz_levels())
-    ex = VectorizedExecutor(spec, p.path, p.order)
+    ex = make_executor(spec, p.path, p.order)
     import dataclasses
     ones_arrays = dataclasses.replace(arrays,
                                       values=jnp.ones_like(arrays.values))

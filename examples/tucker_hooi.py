@@ -10,10 +10,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import spec as S
-from repro.core.executor import CSFArrays, VectorizedExecutor
-from repro.core.planner import plan
-from repro.sparse import build_csf, random_sparse
+from repro import (CSFArrays, build_csf, make_executor, parse, plan,
+                   random_sparse, tttp3)
 
 
 def main(steps: int = 8, ranks=(8, 6, 4), autotune: bool = False,
@@ -31,7 +29,7 @@ def main(steps: int = 8, ranks=(8, 6, 4), autotune: bool = False,
         csf_m = build_csf(T.permute_modes(perm))
         dims = dict(zip("ijk", csf_m.shape))
         r1, r2 = [ranks[m] for m in perm[1:]]
-        spec = S.parse("ijk,jr,ks->irs",
+        spec = parse("ijk,jr,ks->irs",
                        dims={**dims, "r": r1, "s": r2}, sparse=0,
                        names=["T", "U1", "U2"])
         p = plan(spec, nnz_levels=csf_m.nnz_levels(), autotune=autotune,
@@ -40,7 +38,7 @@ def main(steps: int = 8, ranks=(8, 6, 4), autotune: bool = False,
             how = "cache" if p.stats.cache_hit else (
                 f"search ({p.stats.candidates_timed} timed)")
             print(f"mode {mode}: plan from {how}", flush=True)
-        ex = VectorizedExecutor(spec, p.path, p.order)
+        ex = make_executor(spec, p.path, p.order)
         arrays = CSFArrays.from_csf(csf_m)
         execs.append(jax.jit(
             lambda u1, u2, ex=ex, arrays=arrays: ex(

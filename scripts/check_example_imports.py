@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Facade-import lint for ``examples/`` (CI docs lane).
+
+The examples are the repo's copy-paste surface: they must spell imports
+through the top-level facade (``from repro import plan, ...``), not
+through the deep implementation modules — a deep path pasted from an
+example outlives refactors the facade absorbs.  This script fails on
+any import of the facade-covered implementation packages
+(``repro.core``, ``repro.autotune``, ``repro.sparse``,
+``repro.kernels``, ``repro.distributed``) inside ``examples/*.py``.
+
+Application-layer packages with no facade coverage
+(``repro.configs``, ``repro.models``, ``repro.serve``, ``repro.train``,
+``repro.data`` — the LM-workload examples) stay importable directly.
+
+Imports are read with ``ast`` (no example is executed), so the lint
+runs before dependencies are installed.
+
+Usage:
+  python scripts/check_example_imports.py [root]    # default: repo root
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+# implementation packages the facade re-exports — deep imports of these
+# in examples defeat the facade
+FACADE_COVERED = ("repro.core", "repro.autotune", "repro.sparse",
+                  "repro.kernels", "repro.distributed")
+
+
+def deep_imports(path: str) -> list[tuple[int, str]]:
+    with open(path, encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=path)
+    hits = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            names = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            names = [node.module]
+        else:
+            continue
+        for name in names:
+            if any(name == p or name.startswith(p + ".")
+                   for p in FACADE_COVERED):
+                hits.append((node.lineno, name))
+    return hits
+
+
+def main(argv: list[str]) -> int:
+    root = os.path.abspath(argv[1]) if len(argv) > 1 else os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))
+    ex_dir = os.path.join(root, "examples")
+    files = sorted(f for f in os.listdir(ex_dir) if f.endswith(".py"))
+    bad = 0
+    for f in files:
+        for lineno, name in deep_imports(os.path.join(ex_dir, f)):
+            print(f"DEEP IMPORT examples/{f}:{lineno}: {name} — import "
+                  "it from the `repro` facade instead")
+            bad += 1
+    print(f"checked {len(files)} examples/*.py for deep imports: "
+          f"{bad} violation(s)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

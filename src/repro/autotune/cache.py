@@ -52,9 +52,12 @@ from repro.core.spec import SpTTNSpec
 # naming how the nnz-level profile was quantized (``"exact"`` for the
 # classic per-pattern key, a bucketing scheme name for the shared
 # serving-stream key), so a bucketed winner can never shadow an exact one
-# and vice versa.  Older entries deserialize to a different schema and
-# must be unmatched, never read.
-CACHE_VERSION = 6
+# and vice versa.  v7: plan JSON grew the memory-budget slicing fields
+# (``slice_mode``/``slice_chunks``, PLAN_JSON_VERSION 6, DESIGN.md §10) —
+# the budget itself is deliberately NOT a key component (the cache stores
+# the unsliced schedule; the slice decision is re-derived per call), but
+# v6 entries carry v5 plan docs and must be unmatched, never read.
+CACHE_VERSION = 7
 
 # Profile-quantization schemes for serving streams (DESIGN.md §9): a
 # stream of near-identical patterns (MoE routing masks, per-user masks)

@@ -137,19 +137,27 @@ def tune(spec: SpTTNSpec,
          csf=None,
          factors: Mapping | None = None,
          cache_dir: str | None = None,
-         config: TunerConfig | None = None):
+         config: TunerConfig | None = None,
+         *,
+         tuner: TunerConfig | None = None,
+         memory_budget: int | None = None):
     """Find the empirically fastest loop nest; returns (plan, stats).
 
     ``csf``/``factors`` supply measurement inputs; either may be omitted
     and is then synthesized deterministically from the spec.  With
     ``cache_dir`` set, a prior winner for the same (spec, nnz profile,
     device, backend axis, mesh context) is returned without executing any
-    candidate.
+    candidate.  ``tuner`` is the blessed spelling of the TunerConfig
+    kwarg (matching ``plan(tuner=...)``); ``config=`` is a deprecated
+    alias.  ``memory_budget`` (bytes) stamps the returned plan with the
+    slicing decision of DESIGN.md §10; the budget never enters the cache
+    key and the cache stores the unsliced winner, so budgeted and
+    unbudgeted callers share one entry.
 
     >>> from repro.core import spec as S
     >>> tuned, stats = tune(S.mttkrp(8, 6, 5, 4),
-    ...                     config=TunerConfig(max_paths=2, max_candidates=2,
-    ...                                        orders_per_path=1, repeats=2))
+    ...                     tuner=TunerConfig(max_paths=2, max_candidates=2,
+    ...                                       orders_per_path=1, repeats=2))
     >>> stats.cache_hit
     False
     >>> stats.candidates_timed >= 1
@@ -157,7 +165,8 @@ def tune(spec: SpTTNSpec,
     >>> tuned.backend in ("xla", "pallas")
     True
     """
-    config = config or TunerConfig()
+    from repro.core.planner import _resolve_tuner_alias
+    config = _resolve_tuner_alias(tuner, config, "tune") or TunerConfig()
     cost = cost or ConstrainedBlas(bound=2)
     stats = SearchStats()
     t_start = time.perf_counter()
@@ -184,12 +193,20 @@ def tune(spec: SpTTNSpec,
                                   mesh=config.mesh, blocks=config.blocks,
                                   scheme=config.profile_bucket)
         stats.bucket_key = bkey
+    def _budgeted(p):
+        # the slice decision is derived per call from (plan, profile,
+        # budget) — never part of the cached schedule (DESIGN.md §10)
+        if memory_budget is None:
+            return p
+        from repro.core.slicing import stamp_plan_slicing
+        return stamp_plan_slicing(p, levels, memory_budget)
+
     if cache is not None:
         hit = cache.get(key)         # exact-key fast path
         if hit is not None:
             stats.cache_hit = True
             stats.search_seconds = time.perf_counter() - t_start
-            return hit, stats
+            return _budgeted(hit), stats
         if bkey is not None:
             hit = cache.get(bkey)
             if hit is not None and _bucket_reuse_ok(hit, spec, levels,
@@ -197,7 +214,7 @@ def tune(spec: SpTTNSpec,
                 stats.cache_hit = True
                 stats.bucket_hit = True
                 stats.search_seconds = time.perf_counter() - t_start
-                return hit, stats
+                return _budgeted(hit), stats
 
     # --- model-side pruning ------------------------------------------- #
     # generate_candidates ranks by TreeCost.evaluate (the ground-truth
@@ -274,4 +291,4 @@ def tune(spec: SpTTNSpec,
                                       config.profile_bucket).items())}))
 
     stats.search_seconds = time.perf_counter() - t_start
-    return plan, stats
+    return _budgeted(plan), stats

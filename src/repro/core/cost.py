@@ -320,6 +320,9 @@ def buffer_bytes(path: ContractionPath, order: LoopOrder,
 
     This is the TPU-adapted memory model: a buffer fused at sparse depth p
     with dense indices Dset occupies nnz^(I1..Ip) * prod(Dset) elements.
+    The memory-budgeted slicing pass (:mod:`repro.core.slicing`,
+    DESIGN.md §10) prices chunk candidates by re-evaluating this under
+    chunk-restricted ``dims`` — keep it a pure function of its arguments.
     """
     from repro.core.loopnest import buffer_indices, fused_sparse_depth
     pos = {s: i for i, s in enumerate(sparse_storage)}

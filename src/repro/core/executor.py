@@ -49,12 +49,15 @@ BACKENDS = ("reference", "xla", "pallas")
 # Version 2 added the ``backend`` field; version 3 added the ``mesh``
 # shard-context field (DESIGN.md §7); version 4 added the ``fused`` flag
 # (single-kernel chain lowering on the Pallas backend, DESIGN.md §6);
-# version 5 adds the ``block`` field (the tuned Pallas fiber block size,
-# DESIGN.md §8 — ``null`` means engine default / non-Pallas backend).
+# version 5 added the ``block`` field (the tuned Pallas fiber block size,
+# DESIGN.md §8 — ``null`` means engine default / non-Pallas backend);
+# version 6 adds the ``slice_mode``/``slice_chunks`` fields (the
+# memory-budgeted slicing decision of DESIGN.md §10 — ``null``/1 means
+# the plan fits its budget, or was never budgeted).
 # Any other version is rejected — the forward/backward-compat rule is
 # "re-plan, never guess".
 # =========================================================================== #
-PLAN_JSON_VERSION = 5
+PLAN_JSON_VERSION = 6
 
 
 def _operand_to_dict(op) -> dict:
@@ -91,6 +94,8 @@ def plan_to_dict(plan) -> dict:
         "mesh": None if plan.mesh is None else dict(plan.mesh),
         "fused": bool(plan.fused),
         "block": None if plan.block is None else int(plan.block),
+        "slice_mode": plan.slice_mode,
+        "slice_chunks": int(plan.slice_chunks),
     }
 
 
@@ -127,9 +132,37 @@ def plan_from_dict(doc: dict):
         # silently round it — rejected, never coerced
         raise ValueError("plan block must be a positive multiple of 8 "
                          f"or null, got {block!r}")
+    smode = doc.get("slice_mode")
+    schunks = doc.get("slice_chunks", 1)
+    if smode is not None and not isinstance(smode, str):
+        raise ValueError(f"plan slice_mode must be a string or null, "
+                         f"got {smode!r}")
+    if (not isinstance(schunks, int) or isinstance(schunks, bool)
+            or schunks < 1):
+        raise ValueError(f"plan slice_chunks must be a positive int, "
+                         f"got {schunks!r}")
+    if smode is None:
+        if schunks != 1:
+            raise ValueError("plan slice_chunks must be 1 when slice_mode "
+                             f"is null, got {schunks!r}")
+    else:
+        # the decision is only ever stamped for a real split of a dense
+        # mode (DESIGN.md §10); anything else is a foreign/corrupt doc —
+        # rejected, never coerced
+        if smode not in spec.dims:
+            raise ValueError(f"plan slice_mode {smode!r} not in spec dims")
+        if smode in spec.sparse_indices:
+            raise ValueError(f"plan slice_mode {smode!r} is a sparse "
+                             "index; only dense modes are sliceable")
+        if schunks < 2 or schunks > spec.dims[smode]:
+            raise ValueError(
+                f"plan slice_chunks must be in [2, dims[{smode}]="
+                f"{spec.dims[smode]}] when slice_mode is set, "
+                f"got {schunks!r}")
     return SpTTNPlan(spec=spec, path=path, order=order, cost=doc["cost"],
                      flops=doc["flops"], depth=doc["depth"], backend=backend,
-                     mesh=mesh, fused=fused, block=block)
+                     mesh=mesh, fused=fused, block=block,
+                     slice_mode=smode, slice_chunks=schunks)
 
 
 def _tensor_ref(d):
@@ -663,6 +696,26 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# The full extra-kwarg vocabulary of the engines: all three are Pallas
+# code-generator options (DESIGN.md §6/§8).  Anything else is a typo and
+# is rejected — historically e.g. ``blocks=128`` was silently swallowed
+# and the engine ran with its default block size.
+ENGINE_KWARGS = ("block", "strategy", "tile_align")
+
+
+def _check_engine_kwargs(kwargs: Mapping, backend: str, who: str) -> None:
+    unknown = sorted(k for k in kwargs if k not in ENGINE_KWARGS)
+    if unknown:
+        raise ValueError(
+            f"{who}() got unknown argument(s) {unknown}; valid engine "
+            f"options are {sorted(ENGINE_KWARGS)} (plus 'interpret' and "
+            f"'backend')")
+    if kwargs and backend != "pallas":
+        raise ValueError(
+            f"{who}() argument(s) {sorted(kwargs)} apply only to the "
+            f"pallas backend, got backend={backend!r}")
+
+
 def make_executor(spec: SpTTNSpec, path: ContractionPath, order: LoopOrder,
                   backend: str = "xla", interpret: bool | None = None,
                   **kwargs):
@@ -671,7 +724,9 @@ def make_executor(spec: SpTTNSpec, path: ContractionPath, order: LoopOrder,
     All engines share the call signature ``ex(csf_arrays, factors)``.
     ``backend`` is one of :data:`BACKENDS`; ``interpret=None`` resolves via
     :func:`default_interpret` (True off-TPU).  Extra kwargs reach the
-    Pallas code generator (``block``, ``strategy``).
+    Pallas code generator (:data:`ENGINE_KWARGS`: ``block``, ``strategy``,
+    ``tile_align``); unknown kwargs — or Pallas options on a non-Pallas
+    backend — raise ``ValueError`` instead of being silently dropped.
 
     >>> import numpy as np
     >>> from repro.core import spec as S
@@ -687,7 +742,12 @@ def make_executor(spec: SpTTNSpec, path: ContractionPath, order: LoopOrder,
     >>> out = ex(CSFArrays.from_csf(csf), factors)
     >>> out.shape
     (8, 4)
+    >>> make_executor(spec, p.path, p.order, blocks=128)
+    Traceback (most recent call last):
+        ...
+    ValueError: make_executor() got unknown argument(s) ['blocks']; ...
     """
+    _check_engine_kwargs(kwargs, backend, "make_executor")
     if backend == "xla":
         return VectorizedExecutor(spec, path, order)
     if backend == "pallas":
@@ -701,9 +761,17 @@ def make_executor(spec: SpTTNSpec, path: ContractionPath, order: LoopOrder,
 
 
 def execute_plan(plan, csf, factors: Mapping, backend: str | None = None,
-                 **kwargs):
+                 memory_budget: int | None = None, **kwargs):
     """Run an :class:`~repro.core.planner.SpTTNPlan` end to end, honoring
     the plan's tuned backend unless overridden.
+
+    ``memory_budget`` (bytes) prices the plan's working set against the
+    operand's actual nnz profile and, when over budget, replays the same
+    schedule per chunk of one dense mode
+    (:func:`repro.core.slicing.sliced_execute`, DESIGN.md §10).  With no
+    explicit budget, a plan stamped ``slice_chunks > 1`` at planning time
+    replays sliced as stamped.  Both compose with sharded operands: the
+    budget applies within each shard.
 
     ``csf`` is either a single operand (a :class:`CSFArrays` /
     :class:`~repro.sparse.csf.CSFTensor`) or a *sharded* operand: a
@@ -732,6 +800,9 @@ def execute_plan(plan, csf, factors: Mapping, backend: str | None = None,
     >>> out.shape
     (8, 4)
     """
+    _check_engine_kwargs({k: v for k, v in kwargs.items()
+                          if k != "interpret"},
+                         backend or plan.backend, "execute_plan")
     if isinstance(csf, (list, tuple)):
         if plan.spec.output_is_sparse:
             raise ValueError(
@@ -748,9 +819,19 @@ def execute_plan(plan, csf, factors: Mapping, backend: str | None = None,
         total = None
         for shard, f in zip(csf, per_shard):
             part = jnp.asarray(execute_plan(plan, shard, f,
-                                            backend=backend, **kwargs))
+                                            backend=backend,
+                                            memory_budget=memory_budget,
+                                            **kwargs))
             total = part if total is None else total + part
         return total
+    if memory_budget is not None:
+        # price against the operand's true profile; slice only if needed
+        from repro.core import slicing
+        plan = slicing.stamp_plan_slicing(plan, slicing.nnz_levels_of(csf),
+                                          memory_budget)
+    if getattr(plan, "slice_chunks", 1) > 1:
+        from repro.core.slicing import sliced_execute
+        return sliced_execute(plan, csf, factors, backend=backend, **kwargs)
     resolved = backend or plan.backend
     if resolved == "pallas" and getattr(plan, "fused", False):
         # a fused-winner plan replays through the single-kernel chain

@@ -38,9 +38,15 @@ class SpTTNPlan:
     backends.  ``block`` records the Pallas fiber block size the
     schedule won with (DESIGN.md §8) — an autotuning axis since plan
     JSON v5; ``None`` (non-Pallas backends, or a pre-sweep plan) means
-    the engine default.  ``stats`` is attached by autotuned planning
-    (search/cache accounting); it is excluded from equality so a cache
-    round trip compares identical.
+    the engine default.  ``slice_mode``/``slice_chunks`` record the
+    memory-budget slicing decision (DESIGN.md §10, plan JSON v6): the
+    dense mode split into chunks so each replay pass fits the budget the
+    plan was stamped under — ``None``/1 means unsliced (fits, or never
+    budgeted).  The decision is derived, not tuned: it never enters the
+    plan-cache key, and the cache stores the unsliced schedule.
+    ``stats`` is attached by autotuned planning (search/cache
+    accounting); it is excluded from equality so a cache round trip
+    compares identical.
     """
 
     spec: SpTTNSpec
@@ -53,6 +59,8 @@ class SpTTNPlan:
     mesh: Mapping | None = None
     fused: bool = False
     block: int | None = None
+    slice_mode: str | None = None
+    slice_chunks: int = 1
     stats: object | None = dataclasses.field(default=None, compare=False,
                                              repr=False)
 
@@ -64,6 +72,21 @@ class SpTTNPlan:
         return "\n".join(lines)
 
 
+def _resolve_tuner_alias(tuner, config, caller: str):
+    """``tuner=`` is the blessed spelling of the TunerConfig kwarg across
+    the API (``plan``/``tune``); ``config=`` is the deprecated alias."""
+    if tuner is not None and config is not None:
+        raise ValueError(f"{caller}() got both tuner= and config= "
+                         "(aliases for the same TunerConfig); pass tuner=")
+    if config is not None:
+        import warnings
+        warnings.warn(f"{caller}(config=...) is deprecated; use "
+                      f"{caller}(tuner=...)", DeprecationWarning,
+                      stacklevel=3)
+        return config
+    return tuner
+
+
 def plan(spec: SpTTNSpec,
          cost: TreeCost | None = None,
          nnz_levels: Mapping[int, int] | None = None,
@@ -73,7 +96,10 @@ def plan(spec: SpTTNSpec,
          cache_dir: str | None = None,
          csf=None,
          factors: Mapping | None = None,
-         tuner=None) -> SpTTNPlan:
+         tuner=None,
+         *,
+         config=None,
+         memory_budget: int | None = None) -> SpTTNPlan:
     """Find the minimum-cost loop nest for an SpTTN kernel.
 
     Default cost is the paper's experiment metric (§7): maximize BLAS-able
@@ -86,7 +112,14 @@ def plan(spec: SpTTNSpec,
     same key returns the cached plan without executing a single candidate
     (see ``plan.stats``).  ``csf``/``factors`` supply measurement inputs
     and default to deterministic synthetic ones; ``tuner`` is an optional
-    :class:`repro.autotune.TunerConfig`.
+    :class:`repro.autotune.TunerConfig` (``config=`` is a deprecated
+    alias).
+
+    ``memory_budget`` (bytes) stamps the returned plan with the slicing
+    decision that keeps each execution pass within budget
+    (``slice_mode``/``slice_chunks``, DESIGN.md §10); ``execute_plan``
+    then replays it sliced.  The budget never changes which schedule is
+    chosen or cached — only how the winner is replayed.
 
     >>> from repro.core import spec as S
     >>> p = plan(S.mttkrp(8, 6, 5, 4))
@@ -99,6 +132,7 @@ def plan(spec: SpTTNSpec,
     >>> len(p.path)          # two contraction terms: leaf and root
     2
     """
+    tuner = _resolve_tuner_alias(tuner, config, "plan")
     if autotune:
         from repro.autotune import TunerConfig, tune
         if tuner is None:
@@ -108,7 +142,7 @@ def plan(spec: SpTTNSpec,
                                 depth_slack=depth_slack)
         best, stats = tune(spec, cost=cost, nnz_levels=nnz_levels, csf=csf,
                            factors=factors, cache_dir=cache_dir,
-                           config=tuner)
+                           tuner=tuner, memory_budget=memory_budget)
         best.stats = stats
         return best
     cost = cost or ConstrainedBlas(bound=2)
@@ -151,6 +185,9 @@ def plan(spec: SpTTNSpec,
         best = search(MaxBufferSize(), max_paths)
     if best is None:
         raise ValueError(f"no feasible loop nest found for {spec}")
+    if memory_budget is not None:
+        from repro.core.slicing import stamp_plan_slicing
+        best = stamp_plan_slicing(best, nnz_levels, memory_budget)
     return best
 
 

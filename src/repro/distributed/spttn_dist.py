@@ -429,7 +429,7 @@ def make_distributed_tuned(spec: SpTTNSpec, coo: COOTensor, mesh: Mesh,
         cfg = dataclasses.replace(
             base, mesh=shard_mesh_key(mesh, mode_axis, s))
         plan_s, stats_s = tune(spec, csf=csf_s, cache_dir=cache_dir,
-                               config=cfg)
+                               tuner=cfg)
         shards.append(TunedShard(s, csf_s.nnz, plan_s, stats_s, csf=csf_s))
 
     live = [sh for sh in shards if sh.plan is not None]

@@ -197,18 +197,31 @@ class PlanService:
     Execution is eager (no jit): perturbed patterns change array sizes
     every request, so a compiled path would retrace per pattern — the
     opposite of a hot path.
+
+    ``memory_budget`` (bytes) applies the out-of-core regime of
+    DESIGN.md §10 per request: every resolved plan is stamped with the
+    slice decision for the request's true nnz profile, and over-budget
+    dispatches replay the one tuned schedule chunk by chunk (chunk
+    executors are cached like whole-plan executors).  ``tuner`` is the
+    blessed spelling of the TunerConfig kwarg; ``config`` stays accepted.
     """
 
-    def __init__(self, cache_dir: str | None = None, config=None):
+    def __init__(self, cache_dir: str | None = None, config=None, *,
+                 tuner=None, memory_budget: int | None = None):
         from repro.autotune.tuner import TunerConfig
+        if tuner is not None and config is not None:
+            raise ValueError("PlanService() got both tuner= and config= "
+                             "(aliases for the same TunerConfig)")
         self.cache_dir = cache_dir
-        self.config = config or TunerConfig(
+        self.config = tuner or config or TunerConfig(
             profile_bucket="log2", max_paths=4, max_candidates=4,
             orders_per_path=1, warmup=0, repeats=1)
+        self.memory_budget = memory_budget
         self.stats: list[ServeStats] = []
         self._plans: dict = {}          # exact key -> plan
         self._bucket_plans: dict = {}   # bucketed key -> plan
         self._executors: dict = {}      # plan json -> engine instance
+        self._chunk_executors: dict = {}   # plan json -> {width: engine}
 
     def plan_for(self, spec, csf: CSFTensor):
         """Resolve (spec, pattern) to a tuned plan; returns (plan, stats)."""
@@ -233,10 +246,15 @@ class PlanService:
                 self._bucket_plans[bkey], spec, levels, self.config,
                 T.SearchStats()):
             plan, kind = self._bucket_plans[bkey], "bucket"
+            if self.memory_budget is not None:
+                # a bucket-mate's profile, not this one: re-price slicing
+                from repro.core.slicing import stamp_plan_slicing
+                plan = stamp_plan_slicing(plan, levels, self.memory_budget)
             self._plans[key] = plan   # promote: next time it's an exact hit
         else:
             plan, tstats = T.tune(spec, csf=csf, cache_dir=self.cache_dir,
-                                  config=self.config)
+                                  tuner=self.config,
+                                  memory_budget=self.memory_budget)
             kind = ("bucket" if tstats.bucket_hit
                     else "exact" if tstats.cache_hit else "cold")
             self._plans[key] = plan
@@ -272,8 +290,18 @@ class PlanService:
         N, E, C = csf.shape
         spec = moe_dispatch_spec(N, E, C, int(np.shape(x)[-1]))
         plan, st = self.plan_for(spec, csf)
+        factors = {"X": jnp.asarray(x)}
+        if getattr(plan, "slice_chunks", 1) > 1:
+            # over-budget request: replay the one tuned schedule chunk by
+            # chunk, reusing compiled chunk executors across requests
+            from repro.core.executor import plan_to_json
+            from repro.core.slicing import sliced_execute
+            cache = self._chunk_executors.setdefault(plan_to_json(plan), {})
+            out = sliced_execute(plan, CSFArrays.from_csf(csf), factors,
+                                 executor_cache=cache)
+            return out, st
         ex = self._executor_for(plan)
-        out = ex(CSFArrays.from_csf(csf), {"X": jnp.asarray(x)})
+        out = ex(CSFArrays.from_csf(csf), factors)
         return out, st
 
     def dispatch_batch(self, routings: Sequence[COOTensor], xs):

@@ -50,7 +50,7 @@ def _mttkrp_inputs(I=32, J=24, K=16, R=8, density=0.08, seed=3):
 def test_tuned_runtime_never_worse_than_model(dims, density, seed):
     I, J, K, R = dims
     spec, csf, factors = _mttkrp_inputs(I, J, K, R, density, seed)
-    tuned, stats = tune(spec, csf=csf, factors=factors, config=FAST)
+    tuned, stats = tune(spec, csf=csf, factors=factors, tuner=FAST)
     # the model's pick is always measured, and the winner is the measured
     # minimum, so this holds by construction *of real measurements*
     assert stats.model_seconds is not None
@@ -81,7 +81,7 @@ def test_candidates_are_model_ranked_and_deduped():
 # --------------------------------------------------------------------- #
 def test_plan_serialization_round_trip(tmp_path):
     spec, csf, factors = _mttkrp_inputs()
-    tuned, _ = tune(spec, csf=csf, factors=factors, config=FAST,
+    tuned, _ = tune(spec, csf=csf, factors=factors, tuner=FAST,
                     cache_dir=str(tmp_path))
     rt = plan_from_json(plan_to_json(tuned))
     assert rt == tuned                      # full dataclass equality
@@ -182,7 +182,7 @@ def test_cache_key_depends_on_spec_and_device():
 
 def test_plan_cache_atomic_put_and_get(tmp_path):
     spec, csf, factors = _mttkrp_inputs()
-    tuned, stats = tune(spec, csf=csf, factors=factors, config=FAST)
+    tuned, stats = tune(spec, csf=csf, factors=factors, tuner=FAST)
     cache = PlanCache(str(tmp_path))
     path = cache.put("abc123", tuned, meta={"note": "t"})
     assert os.path.exists(path)

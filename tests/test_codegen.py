@@ -180,7 +180,7 @@ def test_plan_json_v5_round_trip_with_backend():
     import dataclasses
     tagged = dataclasses.replace(p, backend="pallas", fused=True, block=16)
     doc = plan_to_dict(tagged)
-    assert doc["version"] == PLAN_JSON_VERSION == 5
+    assert doc["version"] == PLAN_JSON_VERSION == 6
     assert doc["backend"] == "pallas"
     assert doc["mesh"] is None            # single-device plan
     assert doc["fused"] is True
@@ -208,7 +208,7 @@ def test_plan_json_v5_round_trip_with_backend():
             plan_from_dict(dict(plan_to_dict(p), block=bad))
 
 
-@pytest.mark.parametrize("version", [1, 2, 3, 4, None, "5"])
+@pytest.mark.parametrize("version", [1, 2, 3, 4, 5, None, "6"])
 def test_plan_json_rejects_foreign_versions(version):
     """Forward/backward compat is re-plan-never-guess: any version other
     than the current one is rejected outright."""
@@ -294,7 +294,7 @@ def test_candidates_expand_across_backends():
 
 def test_autotune_can_return_pallas_backend_plan(tmp_path):
     spec, csf, factors = _mttkrp_inputs()
-    tuned, stats = tune(spec, csf=csf, factors=factors, config=FAST)
+    tuned, stats = tune(spec, csf=csf, factors=factors, tuner=FAST)
     assert tuned.backend in ("xla", "pallas")
     assert stats.candidates_timed >= 2    # both backends reached the timer
 
@@ -324,8 +324,8 @@ def test_cached_plan_meta_records_backends(tmp_path):
     assert len(files) == 1
     with open(tmp_path / files[0]) as f:
         doc = json.load(f)
-    assert doc["plan"]["version"] == 5
-    assert doc["cache_version"] == 6
+    assert doc["plan"]["version"] == 6
+    assert doc["cache_version"] == 7
     assert set(doc["meta"]["backends"]) == {"xla", "pallas"}
     assert all("backend" in t and "fused" in t and "block" in t
                for t in doc["meta"]["timings"])

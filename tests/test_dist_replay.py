@@ -79,7 +79,7 @@ for name, spec, shape in [
     for fname in entries:
         with open(os.path.join(d, fname)) as f:
             doc = json.load(f)
-        assert doc["plan"]["version"] == 5
+        assert doc["plan"]["version"] == 6
         m = doc["plan"]["mesh"]
         assert m["mesh_shape"] == {{"data": 4}}
         assert m["mode_axis"] == {{"0": "data"}}
@@ -151,22 +151,22 @@ def test_sharded_search_misses_single_device_entry(tmp_path):
     the single-device winner, and a mesh-axis change is a fresh search."""
     spec = S.mttkrp(16, 12, 10, 4)
     csf = build_csf(random_sparse((16, 12, 10), 0.1, seed=3))
-    p0, s0 = tune(spec, csf=csf, cache_dir=str(tmp_path), config=FAST)
+    p0, s0 = tune(spec, csf=csf, cache_dir=str(tmp_path), tuner=FAST)
     assert not s0.cache_hit and p0.mesh is None
 
     sharded = dataclasses.replace(
         FAST, mesh=shard_mesh_key({"data": 2}, {0: "data"}, 0))
-    p1, s1 = tune(spec, csf=csf, cache_dir=str(tmp_path), config=sharded)
+    p1, s1 = tune(spec, csf=csf, cache_dir=str(tmp_path), tuner=sharded)
     assert not s1.cache_hit                 # never reuses the 1-device plan
     assert s1.cache_key != s0.cache_key
     assert p1.mesh == sharded.mesh          # plan carries the shard context
 
-    p2, s2 = tune(spec, csf=csf, cache_dir=str(tmp_path), config=sharded)
+    p2, s2 = tune(spec, csf=csf, cache_dir=str(tmp_path), tuner=sharded)
     assert s2.cache_hit and s2.executions == 0 and p2 == p1
 
     moved = dataclasses.replace(
         FAST, mesh=shard_mesh_key({"model": 2}, {0: "model"}, 0))
-    p3, s3 = tune(spec, csf=csf, cache_dir=str(tmp_path), config=moved)
+    p3, s3 = tune(spec, csf=csf, cache_dir=str(tmp_path), tuner=moved)
     assert not s3.cache_hit                 # mesh axis changed -> miss
     assert s3.cache_key != s1.cache_key
 
@@ -179,7 +179,7 @@ def test_plan_json_v5_mesh_round_trip():
     tagged = dataclasses.replace(
         p, mesh=shard_mesh_key({"data": 4}, {0: "data"}, 2))
     doc = plan_to_dict(tagged)
-    assert doc["version"] == 5
+    assert doc["version"] == 6
     assert doc["mesh"]["shard"] == 2
     rt = plan_from_json(plan_to_json(tagged))
     assert rt == tagged and rt.mesh == tagged.mesh

@@ -23,6 +23,7 @@ MARKDOWN_WITH_DOCTESTS = [
     "docs/distributed.md",
     "docs/cost-models.md",
     "docs/serving.md",
+    "docs/out-of-core.md",
 ]
 
 # the public API surface whose docstrings carry runnable examples
@@ -32,6 +33,7 @@ API_MODULES = [
     "repro.core.executor",
     "repro.core.cost",
     "repro.core.order_dp",
+    "repro.core.slicing",
     "repro.autotune.cache",
     "repro.autotune.tuner",
     "repro.distributed.spttn_dist",
@@ -65,6 +67,15 @@ def _load_script(name):
 def test_no_broken_intra_repo_links(capsys):
     mod = _load_script("check_doc_links")
     assert mod.main(["check_doc_links.py", REPO]) == 0, capsys.readouterr().out
+
+
+def test_examples_use_facade_imports(capsys):
+    """Mirror of the CI example-import lint: examples are the copy-paste
+    surface, so they must import through the `repro` facade, not the
+    implementation packages it re-exports."""
+    mod = _load_script("check_example_imports")
+    assert mod.main(["check_example_imports.py", REPO]) == 0, \
+        capsys.readouterr().out
 
 
 def test_every_doc_is_registered(capsys):

@@ -200,13 +200,13 @@ def test_fused_winner_persists_and_replays(tmp_path):
     forced = TunerConfig(max_paths=2, max_candidates=1, orders_per_path=1,
                          warmup=1, repeats=2, backends=("pallas",))
     tuned, stats = tune(spec, csf=csf, factors=factors,
-                        cache_dir=str(tmp_path), config=forced)
+                        cache_dir=str(tmp_path), tuner=forced)
     assert tuned.backend == "pallas"
     assert stats.candidates_timed == 2      # staged + fused, both measured
 
     fused_plan = dataclasses.replace(tuned, fused=True)
     doc = plan_to_dict(fused_plan)
-    assert doc["version"] == 5 and doc["fused"] is True
+    assert doc["version"] == 6 and doc["fused"] is True
     rt = plan_from_json(plan_to_json(fused_plan))
     assert rt == fused_plan and rt.fused
 
@@ -220,7 +220,7 @@ def test_fused_winner_persists_and_replays(tmp_path):
     # second search is a cache hit returning the same (possibly fused)
     # winner — the fusion flag survives the disk round trip
     tuned2, stats2 = tune(spec, csf=csf, factors=factors,
-                          cache_dir=str(tmp_path), config=forced)
+                          cache_dir=str(tmp_path), tuner=forced)
     assert stats2.cache_hit and tuned2 == tuned
     assert tuned2.fused == tuned.fused
 
@@ -305,7 +305,7 @@ def test_pruned_candidate_never_wins(monkeypatch):
 
     monkeypatch.setattr(tuner_mod, "measure_candidates", fake_measure)
     tuned, stats = tune(spec, csf=csf,
-                        config=TunerConfig(max_paths=2, max_candidates=2,
+                        tuner=TunerConfig(max_paths=2, max_candidates=2,
                                            orders_per_path=1))
     assert (tuned.path, tuned.order) == (captured["full"].path,
                                          captured["full"].order)
@@ -354,7 +354,7 @@ def test_cache_version_guard_rejects_doctored_v3_entry(tmp_path):
 
     with open(path) as f:
         doc = json.load(f)
-    assert doc["cache_version"] == CACHE_VERSION == 6
+    assert doc["cache_version"] == CACHE_VERSION == 7
     # doctor the entry back to the v4 era: stale stamp, v4 plan schema
     doc["cache_version"] = 4
     doc["plan"]["version"] = 4

@@ -1,0 +1,170 @@
+"""The top-level ``repro`` facade and the reconciled kwarg surface.
+
+Covers: (a) ``import repro`` is cheap — no submodule (and so no JAX)
+import happens until an attribute is touched; (b) ``__all__`` is
+complete and honest — every listed name resolves through the facade to
+the same object its defining module exports; (c) ``tuner=`` is the
+blessed TunerConfig kwarg — ``config=`` warns ``DeprecationWarning``
+through one shared resolver and passing both is an error; (d) unknown
+engine kwargs are rejected with the valid set named, and pallas-only
+kwargs are rejected on non-pallas backends; (e) plan JSON v6
+round-trips the slice stamp through the facade spellings and v5
+documents are rejected.
+"""
+import importlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import spec as S
+
+
+# --------------------------------------------------------------------- #
+# (a) lazy facade: import repro touches nothing heavy
+# --------------------------------------------------------------------- #
+def test_import_repro_is_cheap():
+    code = (
+        "import sys, repro\n"
+        "heavy = [m for m in sys.modules\n"
+        "         if m == 'jax' or m.startswith(('jax.', 'repro.'))]\n"
+        "assert not heavy, heavy\n"
+        "assert repro.__version__\n"
+        # first attribute access imports exactly the defining module
+        "repro.mttkrp\n"
+        "assert 'repro.core.spec' in sys.modules\n"
+    )
+    subprocess.run([sys.executable, "-c", code], check=True)
+
+
+# --------------------------------------------------------------------- #
+# (b) __all__ completeness: every export resolves and matches its module
+# --------------------------------------------------------------------- #
+def test_all_is_complete_and_resolves():
+    assert "__version__" in repro.__all__
+    assert sorted(repro.__all__) == sorted(set(repro.__all__))
+    for name in repro.__all__:
+        if name == "__version__":
+            continue
+        obj = getattr(repro, name)
+        mod = importlib.import_module(repro._EXPORTS[name])
+        assert obj is getattr(mod, name), name
+        assert name in dir(repro)
+    # the blessed workflow surface is present by name
+    for required in ("plan", "tune", "execute_plan", "make_executor",
+                     "build_csf", "random_sparse", "plan_peak_bytes",
+                     "sliced_execute", "PlanService", "PlanCache"):
+        assert required in repro.__all__, required
+
+
+def test_unknown_attribute_raises():
+    with pytest.raises(AttributeError, match="no attribute 'bogus'"):
+        repro.bogus
+
+
+# --------------------------------------------------------------------- #
+# (c) tuner= is blessed; config= is a deprecated alias everywhere
+# --------------------------------------------------------------------- #
+def _small():
+    spec = S.mttkrp(12, 8, 6, 4)
+    csf = repro.build_csf(repro.random_sparse((12, 8, 6), 0.1, seed=0))
+    rng = np.random.default_rng(0)
+    factors = {"B": rng.standard_normal((8, 4)).astype(np.float32),
+               "C": rng.standard_normal((6, 4)).astype(np.float32)}
+    return spec, csf, factors
+
+
+FAST = None  # built lazily so module import stays light
+
+
+def _fast():
+    global FAST
+    if FAST is None:
+        FAST = repro.TunerConfig(max_paths=2, max_candidates=2,
+                                 orders_per_path=1, warmup=1, repeats=2)
+    return FAST
+
+
+def test_plan_config_alias_warns_and_both_is_an_error():
+    spec, csf, factors = _small()
+    with pytest.warns(DeprecationWarning, match=r"plan\(config=.*tuner="):
+        via_alias = repro.plan(spec, config=_fast())
+    assert via_alias == repro.plan(spec, tuner=_fast())
+    with pytest.raises(ValueError, match="both tuner= and config="):
+        repro.plan(spec, tuner=_fast(), config=_fast())
+
+
+def test_tune_config_alias_warns_and_both_is_an_error():
+    spec, csf, factors = _small()
+    with pytest.warns(DeprecationWarning, match=r"tune\(config=.*tuner="):
+        p1, s1 = repro.tune(spec, csf=csf, factors=factors, config=_fast())
+    # the alias reached the search as the real config (measured timings
+    # may crown different winners run to run, so compare behavior)
+    assert s1.candidates_timed <= _fast().max_candidates
+    assert isinstance(p1, repro.SpTTNPlan)
+    with pytest.raises(ValueError, match="both tuner= and config="):
+        repro.tune(spec, csf=csf, factors=factors,
+                   tuner=_fast(), config=_fast())
+
+
+def test_plan_service_rejects_both_spellings():
+    with pytest.raises(ValueError, match="both tuner= and config="):
+        repro.PlanService(tuner=_fast(), config=_fast())
+    # either spelling alone works (config= stays accepted for back-compat)
+    assert repro.PlanService(tuner=_fast()).config is _fast()
+    assert repro.PlanService(config=_fast()).config is _fast()
+
+
+# --------------------------------------------------------------------- #
+# (d) unknown engine kwargs fail loudly, with the valid set named
+# --------------------------------------------------------------------- #
+def test_make_executor_rejects_unknown_kwargs():
+    spec, csf, factors = _small()
+    p = repro.plan(spec)
+    with pytest.raises(ValueError) as ei:
+        repro.make_executor(spec, p.path, p.order, blocks=128)
+    msg = str(ei.value)
+    assert "blocks" in msg
+    for valid in ("block", "strategy", "tile_align"):
+        assert valid in msg
+    # pallas-only kwargs on a non-pallas backend are rejected, not ignored
+    with pytest.raises(ValueError, match="pallas backend"):
+        repro.make_executor(spec, p.path, p.order, backend="xla", block=8)
+
+
+def test_execute_plan_rejects_unknown_kwargs():
+    spec, csf, factors = _small()
+    p = repro.plan(spec, nnz_levels=csf.nnz_levels())
+    arrays = repro.CSFArrays.from_csf(csf)
+    with pytest.raises(ValueError, match="unknown argument"):
+        repro.execute_plan(p, arrays, factors, strategies="fused")
+    with pytest.raises(ValueError, match="pallas backend"):
+        repro.execute_plan(p, arrays, factors, tile_align=True)  # xla plan
+    # the happy path still happy after the rejections
+    out = repro.execute_plan(p, arrays, factors)
+    assert np.asarray(out).shape == (12, 4)
+
+
+# --------------------------------------------------------------------- #
+# (e) plan JSON v6 through the facade: slice stamp round-trips, v5 dies
+# --------------------------------------------------------------------- #
+def test_v6_round_trip_and_v5_rejection():
+    import json
+    spec, csf, factors = _small()
+    p = repro.plan(spec, nnz_levels=csf.nnz_levels())
+    peak = repro.plan_peak_bytes(spec, p.path, p.order, csf.nnz_levels())
+    stamped = repro.plan(spec, nnz_levels=csf.nnz_levels(),
+                         memory_budget=peak // 2)
+    assert stamped.slice_chunks > 1
+    rt = repro.plan_from_json(repro.plan_to_json(stamped))
+    assert rt == stamped
+    assert (rt.slice_mode, rt.slice_chunks) == (stamped.slice_mode,
+                                                stamped.slice_chunks)
+
+    doc = json.loads(repro.plan_to_json(p))
+    assert doc["version"] == 6
+    doc["version"] = 5
+    with pytest.raises(ValueError, match="unsupported plan version 5"):
+        repro.plan_from_json(json.dumps(doc))

@@ -156,6 +156,36 @@ def test_bucket_hit_parity_vs_fresh_tune(tmp_path):
             np.einsum("tec,td->ecd", coo.to_dense(), x), atol=1e-4)
 
 
+def test_budgeted_service_slices_dispatch(tmp_path):
+    """A service built with memory_budget dispatches over-budget plans
+    through the sliced replay path, exactly, reusing one chunk-executor
+    set per plan across requests — and shares the budget-free plan cache
+    with unbudgeted services."""
+    from repro.autotune.tuner import TunerConfig
+    from repro.serve import PlanService
+    cfg = TunerConfig(profile_bucket="log2", max_paths=2, max_candidates=2,
+                      orders_per_path=1, warmup=0, repeats=1)
+    x = np.random.default_rng(3).standard_normal((N, D)).astype(np.float32)
+
+    plain = PlanService(cache_dir=str(tmp_path), tuner=cfg)
+    ref, st = plain.dispatch(_routing(N, E, K, C, 0), x)
+    assert st.kind == "cold"
+
+    budgeted = PlanService(cache_dir=str(tmp_path), tuner=cfg,
+                           memory_budget=4096)
+    out, st = budgeted.dispatch(_routing(N, E, K, C, 0), x)
+    assert st.kind == "exact"       # same disk entry the cold search wrote
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    # the dispatch really went through chunk executors, and repeats reuse
+    assert len(budgeted._chunk_executors) == 1
+    widths = next(iter(budgeted._chunk_executors.values()))
+    assert widths and all(isinstance(w, int) for w in widths)
+    out2, _ = budgeted.dispatch(_routing(N, E, K, C, 0), x)
+    assert len(budgeted._chunk_executors) == 1
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(ref),
+                               atol=1e-5)
+
+
 def test_bucket_guard_forces_replan(tmp_path):
     """A bucketed entry whose cost estimate fails the tolerance must be
     ignored — the request replans instead of running a foreign nest."""

@@ -1,0 +1,277 @@
+"""Memory-budgeted sliced execution (core/slicing.py, DESIGN.md §10).
+
+Covers: (a) sliced replay is exact — 1e-5 parity vs unsliced execution
+on MTTKRP/TTMc (output-mode slabs) and TTTP (contracted-mode
+accumulation), non-divisible chunk tails included; (b) the budget is
+honored — every chunk's MaxBufferSize-based footprint, tail included,
+prices at or under the budget; (c) one cached plan — a budgeted tune
+persists exactly one UNSLICED entry that budgeted and unbudgeted
+callers share; (d) slicing composes with sharded ``execute_plan``
+(slice within shard, zero-nnz shards included); (e) infeasible budgets
+raise ``MemoryBudgetError``; (f) a stamped plan replays sliced with no
+explicit budget.
+"""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.autotune import TunerConfig, tune
+from repro.core import spec as S
+from repro.core import slicing
+from repro.core.executor import CSFArrays, dense_oracle, execute_plan
+from repro.core.planner import plan
+from repro.core.slicing import (MemoryBudgetError, choose_slicing,
+                                chunk_footprints, plan_peak_bytes,
+                                sliced_execute, stamp_plan_slicing)
+from repro.sparse import build_csf, random_sparse
+from repro.sparse.coo import from_coords
+
+FAST = TunerConfig(max_paths=2, max_candidates=2, orders_per_path=1,
+                   warmup=1, repeats=2)
+
+
+def _inputs(spec, density=0.08, seed=3, fseed=0):
+    shape = tuple(spec.dims[i] for i in spec.inputs[0].indices)
+    csf = build_csf(random_sparse(shape, density, seed=seed))
+    rng = np.random.default_rng(fseed)
+    factors = {t.name: jnp.asarray(rng.standard_normal(
+                   tuple(spec.dims[i] for i in t.indices))
+                   .astype(np.float32))
+               for t in spec.inputs if not t.is_sparse}
+    return csf, factors
+
+
+# --------------------------------------------------------------------- #
+# (a) exactness: sliced == unsliced to 1e-5, tails included
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("spec,kind", [
+    (S.mttkrp(30, 14, 10, 20), "output"),       # 20 % chunks -> tail
+    (S.ttmc3(24, 12, 10, 14, 6), "output"),
+    (S.tttp3(24, 12, 10, 18), "contracted"),    # output sparse: r summed
+])
+def test_sliced_parity_with_tails(spec, kind):
+    csf, factors = _inputs(spec)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    arrays = CSFArrays.from_csf(csf)
+    full = np.asarray(execute_plan(p, arrays, factors))
+
+    peak = plan_peak_bytes(spec, p.path, p.order, csf.nnz_levels())
+    budget = peak // 2
+    stamped = stamp_plan_slicing(p, csf.nnz_levels(), budget)
+    assert stamped.slice_chunks > 1
+    d = slicing.plan_decision(stamped, csf.nnz_levels())
+    assert d.kind == kind
+
+    out = np.asarray(execute_plan(p, arrays, factors,
+                                  memory_budget=budget))
+    np.testing.assert_allclose(out, full, atol=1e-5)
+    if not spec.output_is_sparse:
+        # and against the dense einsum oracle, not just ourselves
+        oracle = dense_oracle(spec, csf, {k: np.asarray(v)
+                                          for k, v in factors.items()})
+        np.testing.assert_allclose(out, oracle, atol=1e-3)
+
+
+def test_sliced_parity_pallas_interpret():
+    """The chunk executors honor the plan's engine: a Pallas plan replays
+    its chunks through the generated kernels (interpret mode on CPU)."""
+    import dataclasses
+    spec = S.mttkrp(24, 12, 10, 16)
+    csf, factors = _inputs(spec)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    arrays = CSFArrays.from_csf(csf)
+    full = np.asarray(execute_plan(p, arrays, factors))
+    peak = plan_peak_bytes(spec, p.path, p.order, csf.nnz_levels())
+    pp = dataclasses.replace(p, backend="pallas", block=8)
+    out = execute_plan(pp, arrays, factors, memory_budget=peak // 2,
+                       interpret=True)
+    np.testing.assert_allclose(np.asarray(out), full, atol=1e-5)
+
+
+def test_zero_nnz_operand_slices_to_zeros():
+    spec = S.mttkrp(16, 8, 6, 12)
+    csf = build_csf(from_coords(np.zeros((0, 3), dtype=np.int32),
+                                np.zeros((0,), dtype=np.float32),
+                                (16, 8, 6)))
+    rng = np.random.default_rng(0)
+    factors = {"B": rng.standard_normal((8, 12)).astype(np.float32),
+               "C": rng.standard_normal((6, 12)).astype(np.float32)}
+    p = plan(spec)
+    peak = plan_peak_bytes(spec, p.path, p.order, csf.nnz_levels())
+    stamped = stamp_plan_slicing(p, csf.nnz_levels(), peak // 2)
+    assert stamped.slice_chunks > 1
+    out = np.asarray(sliced_execute(stamped, CSFArrays.from_csf(csf),
+                                    factors))
+    assert out.shape == (16, 12) and not out.any()
+
+
+# --------------------------------------------------------------------- #
+# (b) budget compliance: every chunk (tail included) prices under it
+# --------------------------------------------------------------------- #
+def test_every_chunk_footprint_under_budget():
+    spec = S.mttkrp(30, 14, 10, 20)
+    csf, _ = _inputs(spec)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    levels = csf.nnz_levels()
+    peak = plan_peak_bytes(spec, p.path, p.order, levels)
+    for frac in (2, 3, 5):
+        budget = peak // frac
+        d = choose_slicing(spec, p.path, p.order, levels, budget)
+        assert d.chunks > 1 and d.chunk_bytes <= budget < d.peak_bytes
+        stamped = stamp_plan_slicing(p, levels, budget)
+        fps = chunk_footprints(stamped, levels)
+        assert len(fps) == stamped.slice_chunks
+        assert max(fps) <= budget
+
+    # an in-budget plan is left alone — no stamp, no slicing
+    assert stamp_plan_slicing(p, levels, peak + 1) is p
+    d = choose_slicing(spec, p.path, p.order, levels, peak + 1)
+    assert (d.mode, d.chunks, d.kind) == (None, 1, "none")
+
+
+def test_fewest_chunks_rule_prefers_output_mode():
+    """MTTKRP's only dense mode is the rank: the decision must pick it,
+    as an output mode, with the minimal chunk count (bisection exact —
+    chunks-1 must NOT fit)."""
+    spec = S.mttkrp(64, 32, 16, 32)
+    csf, _ = _inputs(spec, density=0.05, seed=0)
+    levels = csf.nnz_levels()
+    p = plan(spec, nnz_levels=levels)
+    budget = plan_peak_bytes(spec, p.path, p.order, levels) // 2
+    d = choose_slicing(spec, p.path, p.order, levels, budget)
+    assert d.mode == "a" and d.kind == "output"
+    narrower = dict(spec.dims, a=-(-spec.dims["a"] // (d.chunks - 1)))
+    assert slicing._footprint(spec, p.path, p.order, levels, narrower,
+                              slicing.DEFAULT_ITEMSIZE) > budget
+
+
+# --------------------------------------------------------------------- #
+# (c) one cached plan: the entry is unsliced; budgets share it
+# --------------------------------------------------------------------- #
+def test_budgeted_tune_caches_one_unsliced_plan(tmp_path):
+    spec = S.mttkrp(32, 24, 16, 16)
+    csf, factors = _inputs(spec)
+    levels = csf.nnz_levels()
+
+    # the model path stamps too: plan(memory_budget=...) returns sliced
+    probe = plan(spec, nnz_levels=levels)
+    probe_budget = plan_peak_bytes(spec, probe.path, probe.order,
+                                   levels) // 2
+    assert plan(spec, nnz_levels=levels,
+                memory_budget=probe_budget).slice_chunks > 1
+
+    tuned0, s0 = tune(spec, csf=csf, factors=factors,
+                      cache_dir=str(tmp_path), tuner=FAST)
+    assert not s0.cache_hit and tuned0.slice_chunks == 1
+    budget = plan_peak_bytes(spec, tuned0.path, tuned0.order, levels) // 2
+
+    # a budgeted call hits the SAME entry and stamps after the get
+    tuned, s1 = tune(spec, csf=csf, factors=factors,
+                     cache_dir=str(tmp_path), tuner=FAST,
+                     memory_budget=budget)
+    assert s1.cache_hit and tuned.slice_chunks > 1
+    assert (tuned.path, tuned.order) == (tuned0.path, tuned0.order)
+
+    entries = glob.glob(os.path.join(str(tmp_path), "plan-*.json"))
+    assert len(entries) == 1
+    with open(entries[0]) as f:
+        doc = json.load(f)["plan"]
+    assert doc["slice_mode"] is None and doc["slice_chunks"] == 1
+
+    # the chunks all replay the one schedule, exactly
+    out = np.asarray(execute_plan(tuned, CSFArrays.from_csf(csf), factors))
+    ref = np.asarray(execute_plan(tuned0, CSFArrays.from_csf(csf),
+                                  factors))
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+def test_sliced_execute_builds_one_executor_per_width():
+    spec = S.mttkrp(24, 12, 10, 10)   # 10 into 3 chunks: widths 4, 4, 2
+    csf, factors = _inputs(spec)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    cache = {}
+    out = sliced_execute(p, CSFArrays.from_csf(csf), factors,
+                         mode="a", chunks=3, executor_cache=cache)
+    assert sorted(cache) == [2, 4]     # tail width compiled once, reused
+    full = np.asarray(execute_plan(p, CSFArrays.from_csf(csf), factors))
+    np.testing.assert_allclose(np.asarray(out), full, atol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# (d) composes with sharded operands: slice within shard
+# --------------------------------------------------------------------- #
+def test_sharded_execute_slices_within_shards():
+    spec = S.mttkrp(32, 24, 16, 16)
+    csf, factors = _inputs(spec, density=0.05, seed=5)
+    coo = random_sparse((32, 24, 16), 0.05, seed=5)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    full = np.asarray(execute_plan(p, CSFArrays.from_csf(csf), factors))
+
+    # shard by mode-0 halves, plus one shard with ZERO nonzeros
+    mask = coo.coords[:, 0] < 16
+    shards = [CSFArrays.from_csf(build_csf(from_coords(
+                  coo.coords[m], coo.values[m], coo.shape)))
+              for m in (mask, ~mask)]
+    shards.append(CSFArrays.from_csf(build_csf(from_coords(
+        np.zeros((0, 3), dtype=np.int32),
+        np.zeros((0,), dtype=np.float32), coo.shape))))
+
+    peak = plan_peak_bytes(spec, p.path, p.order, csf.nnz_levels())
+    out = np.asarray(execute_plan(p, shards, factors,
+                                  memory_budget=peak // 2))
+    np.testing.assert_allclose(out, full, atol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# (e) infeasible budgets fail loudly and point at sharding
+# --------------------------------------------------------------------- #
+def test_infeasible_budget_raises():
+    spec = S.mttkrp(32, 24, 16, 16)
+    csf, _ = _inputs(spec)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    with pytest.raises(MemoryBudgetError, match="shard"):
+        choose_slicing(spec, p.path, p.order, csf.nnz_levels(), 64)
+    with pytest.raises(ValueError, match="positive"):
+        choose_slicing(spec, p.path, p.order, csf.nnz_levels(), 0)
+
+
+def test_sliced_execute_rejects_bad_modes():
+    spec = S.mttkrp(16, 8, 6, 8)
+    csf, factors = _inputs(spec)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    arrays = CSFArrays.from_csf(csf)
+    with pytest.raises(ValueError, match="use execute_plan"):
+        sliced_execute(p, arrays, factors)           # unstamped plan
+    with pytest.raises(ValueError, match="sparse index"):
+        sliced_execute(p, arrays, factors, mode="i", chunks=2)
+    with pytest.raises(ValueError, match="not in spec dims"):
+        sliced_execute(p, arrays, factors, mode="q", chunks=2)
+
+
+# --------------------------------------------------------------------- #
+# (f) a stamped plan replays sliced with no budget in sight
+# --------------------------------------------------------------------- #
+def test_stamped_plan_replays_sliced(monkeypatch):
+    spec = S.mttkrp(24, 12, 10, 16)
+    csf, factors = _inputs(spec)
+    levels = csf.nnz_levels()
+    p = plan(spec, nnz_levels=levels)
+    budget = plan_peak_bytes(spec, p.path, p.order, levels) // 2
+    stamped = stamp_plan_slicing(p, levels, budget)
+    assert stamped.slice_chunks > 1 and p.slice_chunks == 1  # pure stamp
+
+    calls = []
+    real = slicing.sliced_execute
+    monkeypatch.setattr(slicing, "sliced_execute",
+                        lambda *a, **k: calls.append(1) or real(*a, **k))
+    full = np.asarray(execute_plan(p, CSFArrays.from_csf(csf), factors))
+    assert calls == []                       # unstamped: direct path
+    out = np.asarray(execute_plan(stamped, CSFArrays.from_csf(csf),
+                                  factors))
+    assert calls == [1]                      # stamped: sliced path
+    np.testing.assert_allclose(out, full, atol=1e-5)

@@ -282,21 +282,21 @@ def test_tuned_block_persists_and_replays(tmp_path):
                       warmup=1, repeats=2, backends=("pallas",),
                       blocks=(8, 16))
     tuned, stats = tune(spec, csf=csf, factors=factors,
-                        cache_dir=str(tmp_path), config=cfg)
+                        cache_dir=str(tmp_path), tuner=cfg)
     assert tuned.backend == "pallas"
     assert tuned.block in (8, 16)
     assert stats.candidates_timed >= 2       # both blocks reached the timer
 
     # disk round trip: cache hit returns the same block
     tuned2, stats2 = tune(spec, csf=csf, factors=factors,
-                          cache_dir=str(tmp_path), config=cfg)
+                          cache_dir=str(tmp_path), tuner=cfg)
     assert stats2.cache_hit and tuned2 == tuned
     assert tuned2.block == tuned.block
 
     # the meta records every (block, seconds) pair that was measured
     entry = json.loads((tmp_path / f"plan-{stats.cache_key}.json")
                        .read_text())
-    assert entry["cache_version"] == CACHE_VERSION == 6
+    assert entry["cache_version"] == CACHE_VERSION == 7
     assert {t["block"] for t in entry["meta"]["timings"]} == {8, 16}
 
     # execute_plan replays the tuned block on the generated-kernel engine
@@ -324,7 +324,7 @@ def test_plan_json_v5_block_round_trip_and_v4_rejection():
     p = plan(S.mttkrp(8, 6, 5, 3))
     tagged = dataclasses.replace(p, backend="pallas", block=24)
     doc = plan_to_dict(tagged)
-    assert doc["version"] == PLAN_JSON_VERSION == 5
+    assert doc["version"] == PLAN_JSON_VERSION == 6
     assert doc["block"] == 24
     rt = plan_from_dict(doc)
     assert rt == tagged and rt.block == 24
