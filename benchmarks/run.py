@@ -3,7 +3,8 @@
   Fig 8   -> bench_mttkrp        Fig 9c/§7 TTTP -> bench_tttp
   §7 TTMc -> bench_ttmc          Fig 10a        -> bench_tttc
   Fig 10c -> bench_index_order   Alg 1          -> bench_search
-  Fig 9/10b -> bench_strong_scaling (opt-in: SCALING=1, spawns subprocesses)
+  Fig 9/10b -> bench_strong_scaling (1..8 fake devices x both shard_map
+               engines — XLA collective and stacked Pallas; subprocesses)
   MoE-SpTTN integration          -> bench_moe_dispatch
   §5.2 + DESIGN.md §7            -> bench_dist (1-vs-N tuned plan replay)
 
@@ -68,9 +69,8 @@ def main() -> int:
         ("dist", lambda: bench_dist.run(scale=scale)),
         ("serve_latency", bench_serve_latency.run),
         ("outofcore", lambda: bench_outofcore.run(scale=scale)),
+        ("strong_scaling", lambda: bench_strong_scaling.run(scale=scale)),
     ]
-    if os.environ.get("SCALING", "0") == "1":
-        suites.append(("strong_scaling", bench_strong_scaling.run))
 
     results: dict[str, object] = {}
     failed: list[str] = []

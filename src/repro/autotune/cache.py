@@ -246,6 +246,63 @@ class PlanCache:
             # writer — is a miss; the next search overwrites it
             return None
 
+    def annotate(self, key: str, **fields) -> bool:
+        """Merge ``fields`` into an existing entry's ``meta`` (atomic
+        rewrite).  Returns False on a miss, a corrupt entry, or a stale
+        ``cache_version`` — annotation never resurrects or creates
+        entries, it only enriches live ones (e.g. the distributed router
+        recording which execution mode a shard's winner was routed
+        through, ``dist_mode``).
+
+        >>> import tempfile
+        >>> from repro.core import spec as S
+        >>> from repro.core.planner import plan
+        >>> cache = PlanCache(tempfile.mkdtemp())
+        >>> _ = cache.put("k", plan(S.mttkrp(8, 6, 5, 4)),
+        ...               meta={"best_us": 1.0})
+        >>> cache.annotate("k", dist_mode="collective-pallas")
+        True
+        >>> cache.meta("k")["dist_mode"]
+        'collective-pallas'
+        >>> cache.meta("k")["best_us"]
+        1.0
+        >>> cache.annotate("missing", dist_mode="replay")
+        False
+        """
+        path = self._path(key)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            if doc.get("cache_version") != CACHE_VERSION:
+                return False
+        except (OSError, ValueError):
+            return False
+        meta = dict(doc.get("meta") or {})
+        meta.update(fields)
+        doc["meta"] = meta
+        fd, tmp = tempfile.mkstemp(dir=self.cache_dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, sort_keys=True, indent=1)
+            os.replace(tmp, path)   # atomic publish
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        return True
+
+    def meta(self, key: str) -> dict | None:
+        """The entry's meta mapping (timings, annotations), or None on a
+        miss/corrupt/stale entry — same miss semantics as :meth:`get`."""
+        try:
+            with open(self._path(key)) as f:
+                doc = json.load(f)
+            if doc.get("cache_version") != CACHE_VERSION:
+                return None
+            return dict(doc.get("meta") or {})
+        except (OSError, ValueError):
+            return None
+
     def put(self, key: str, plan, meta: Mapping | None = None) -> str:
         from repro.core.executor import plan_to_dict
         doc = {"cache_version": CACHE_VERSION,

@@ -1,12 +1,16 @@
 from repro.distributed import collectives, sharding, spttn_dist
-from repro.distributed.spttn_dist import (DistributedPlanReplay,
+from repro.distributed.spttn_dist import (DIST_MODES, DistributedPlanReplay,
                                           make_distributed,
+                                          make_distributed_pallas,
                                           make_distributed_tuned,
+                                          partition_mesh,
                                           partition_nonzeros,
-                                          shard_mesh_key)
+                                          shard_mesh_key, stackable_plan,
+                                          unpad_local_csf)
 
 __all__ = [
-    "collectives", "sharding", "spttn_dist", "DistributedPlanReplay",
-    "make_distributed", "make_distributed_tuned", "partition_nonzeros",
-    "shard_mesh_key",
+    "collectives", "sharding", "spttn_dist", "DIST_MODES",
+    "DistributedPlanReplay", "make_distributed", "make_distributed_pallas",
+    "make_distributed_tuned", "partition_mesh", "partition_nonzeros",
+    "shard_mesh_key", "stackable_plan", "unpad_local_csf",
 ]

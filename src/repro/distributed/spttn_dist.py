@@ -13,23 +13,35 @@ CTF layout, TPU-native:
     sparse modes, and comes out naturally sharded over output modes.
 
 Local CSFs are padded to common sizes so one jaxpr serves all shards; all
-padding is provably zero-contributing (zero values / fiber-0 segments).
+padding is provably zero-contributing (zero values, segment tails held at
+the last segment id so every segment map stays sorted).
 
-Two entry points (DESIGN.md §7, docs/distributed.md):
+Three execution modes (DESIGN.md §7, docs/distributed.md):
 
-* :func:`make_distributed` — the collective engine: one plan, one
+* :func:`make_distributed` — the XLA collective engine: one plan, one
   shard_map jaxpr, psum over contracted partitioned modes.
+* :func:`make_distributed_pallas` — the stacked Pallas engine: the
+  generated-kernel executor traced ONCE inside shard_map for every
+  shard.  Pallas stages need concrete segment layouts at trace time, so
+  each shard's block layout is precomputed on host, padded to the
+  mesh-wide maximum with inert blocks, stacked ``(n_shards, ...)``, and
+  re-installed per shard inside the traced function — the scalar-
+  prefetch operands become traced per-shard slices, the kernel trace is
+  shared, and contracted-mode partials still reduce with psum (no host
+  round trip).
 * :func:`make_distributed_tuned` — distributed *plan replay*: the
   autotuner runs (or cache-hits) per shard on each shard's local nnz
-  profile, and every shard executes through ``execute_plan`` with its
-  winner's backend.  Homogeneous XLA winners route back through the
-  collective engine; anything else replays shard-by-shard with a
-  host-side sum of partials (exact, since shards keep global
+  profile.  Homogeneous XLA winners route through the collective
+  engine; homogeneous Pallas winners whose plan passes
+  :func:`stackable_plan` route through the stacked Pallas engine
+  (mode ``"collective-pallas"``); anything else replays shard-by-shard
+  with a host-side sum of partials (exact, since shards keep global
   coordinates and partition the nonzeros).
 """
 from __future__ import annotations
 
 import dataclasses
+import types
 from typing import Mapping
 
 import numpy as np
@@ -74,7 +86,18 @@ class DistributedSpTTN:
 
 
 def _pad_local_csf(csf, max_nnz: int, max_nfib: dict[int, int]):
-    """Flattened per-level arrays padded with zero-contribution entries."""
+    """Flattened per-level arrays padded with zero-contribution entries.
+
+    Values pad with zeros and fiber coordinates with 0 (a real local
+    coordinate — harmless because the padded values are zero).  Segment
+    tails pad with the LAST segment id (``max_nfib[par] - 1``), not 0:
+    every CSF segment map is sorted ascending, and both the Pallas block
+    layouts (:func:`repro.kernels.util.padded_segment_layout`) and
+    ``segment_sum(..., indices_are_sorted=True)`` rely on that — a zero
+    tail after a nonzero id would silently break it.  The padded rows
+    still contribute nothing (their values are zero), they just
+    accumulate into the final row instead of row 0.
+    """
     order = csf.order
     out = {"values": np.zeros(max_nnz, csf.values.dtype)}
     out["values"][: csf.nnz] = csf.values
@@ -87,9 +110,29 @@ def _pad_local_csf(csf, max_nnz: int, max_nfib: dict[int, int]):
     for child in range(1, order + 1):
         for par in range(0, child):
             seg = level_segments(csf, child, par)
-            a = np.zeros(max_nfib[child], np.int32)
+            padval = (max_nfib[par] - 1) if par > 0 else 0
+            a = np.full(max_nfib[child], padval, np.int32)
             a[: len(seg)] = seg
             out[f"seg_{child}_{par}"] = a
+    return out
+
+
+def unpad_local_csf(packed: Mapping[str, np.ndarray], order: int,
+                    nnz: int, nfib: Mapping[int, int]) -> dict:
+    """Invert :func:`_pad_local_csf`: slice one shard's padded arrays
+    back to its real ``nnz`` / per-level ``nfib`` counts.  Padding never
+    mixes into real slots (it is strictly appended), so the round trip
+    is bit-exact — the property the stacked engines rest on, and what
+    the hypothesis suite in tests/test_stacked_dist.py checks."""
+    out = {"values": np.asarray(packed["values"])[:nnz]}
+    for p in range(1, order + 1):
+        for m in range(p):
+            out[f"coord_{p}_{m}"] = \
+                np.asarray(packed[f"coord_{p}_{m}"])[: nfib[p]]
+    for child in range(1, order + 1):
+        for par in range(0, child):
+            out[f"seg_{child}_{par}"] = \
+                np.asarray(packed[f"seg_{child}_{par}"])[: nfib[child]]
     return out
 
 
@@ -103,10 +146,36 @@ def _unpack_csf(stacked_local: dict, order: int, nfib: dict[int, int],
                      seg=seg, nfib=nfib, order=order, shape=shape)
 
 
-def make_distributed(spec: SpTTNSpec, plan: SpTTNPlan, coo: COOTensor,
-                     mesh: Mesh, mode_axis: dict[int, str],
-                     cyclic: bool = True) -> DistributedSpTTN:
-    """Partition ``coo`` per ``mode_axis`` and build the shard_map kernel.
+@dataclasses.dataclass
+class MeshPartition:
+    """Host-side result of partitioning a COO over the mesh — everything
+    the shard_map engines share: per-shard padded CSF arrays (numpy
+    ``packed`` for layout precomputation, jnp ``stacked`` for the traced
+    call), factor/output shardings, and the psum axes.  Built by
+    :func:`partition_mesh`; consumed by :func:`make_distributed` (XLA
+    collective) and :func:`make_distributed_pallas` (stacked Pallas)."""
+
+    order: int
+    nshards: int
+    csfs: list                          # per-shard local CSFTensors
+    packed: list                        # per-shard padded numpy arrays
+    stacked: dict                       # (n_shards, ...) jnp arrays
+    perm: np.ndarray                    # nnz permutation (global -> stacked)
+    local_shape: tuple
+    local_spec: SpTTNSpec
+    max_nnz: int
+    max_nfib: dict
+    part_axes: tuple
+    factor_specs: dict
+    factor_perm: dict
+    out_spec: object
+    reduce_axes: list
+
+
+def partition_mesh(spec: SpTTNSpec, coo: COOTensor, mesh: Mesh,
+                   mode_axis: dict[int, str],
+                   cyclic: bool = True) -> MeshPartition:
+    """Partition ``coo`` per ``mode_axis`` into the stacked shard layout.
 
     Only mode 0 (+ optionally mode 1) partitioning is exercised in tests;
     the construction is generic over any subset of modes.
@@ -157,7 +226,6 @@ def make_distributed(spec: SpTTNSpec, plan: SpTTNPlan, coo: COOTensor,
 
     # shardings: stacked CSF arrays over the partition axes (flattened)
     part_axes = tuple(mode_axis[m] for m in mode_axis)
-    csf_specs = {k: P(part_axes) for k in stacked}
     dims_local = dict(spec.dims)
     for m, ind in enumerate(sp_inds):
         if m in mode_axis:
@@ -211,8 +279,44 @@ def make_distributed(spec: SpTTNSpec, plan: SpTTNPlan, coo: COOTensor,
             reduce_axes.append(a)
     out_spec = P(*out_parts) if not spec.output_is_sparse else P(part_axes)
 
-    executor = VectorizedExecutor(local_spec, plan.path, plan.order)
-    nfib_static = dict(max_nfib)
+    return MeshPartition(
+        order=order, nshards=nshards, csfs=csfs, packed=packed,
+        stacked=stacked, perm=np.concatenate(sorted_ids),
+        local_shape=local_shape, local_spec=local_spec, max_nnz=max_nnz,
+        max_nfib=max_nfib, part_axes=part_axes, factor_specs=factor_specs,
+        factor_perm=factor_perm, out_spec=out_spec,
+        reduce_axes=reduce_axes)
+
+
+def _compile_shard_map(mesh: Mesh, part: MeshPartition, local_fn,
+                       extra_stacked: dict | None = None):
+    """jit(shard_map(local_fn)) over the stacked arrays (+ any stacked
+    layout tables), every stacked input sharded over the partition axes."""
+    stacked = dict(part.stacked)
+    if extra_stacked:
+        stacked.update(extra_stacked)
+    csf_specs = {k: P(part.part_axes) for k in stacked}
+    from repro.distributed.collectives import shard_map
+    fn = jax.jit(shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(csf_specs, part.factor_specs),
+        out_specs=part.out_spec,
+        check_vma=False))
+    return stacked, fn
+
+
+def make_distributed(spec: SpTTNSpec, plan: SpTTNPlan, coo: COOTensor,
+                     mesh: Mesh, mode_axis: dict[int, str],
+                     cyclic: bool = True) -> DistributedSpTTN:
+    """Partition ``coo`` per ``mode_axis`` and build the XLA collective
+    shard_map kernel (one :class:`VectorizedExecutor` jaxpr serves every
+    shard; see :func:`make_distributed_pallas` for the generated-kernel
+    sibling)."""
+    part = partition_mesh(spec, coo, mesh, mode_axis, cyclic=cyclic)
+    executor = VectorizedExecutor(part.local_spec, plan.path, plan.order)
+    nfib_static = dict(part.max_nfib)
+    order, local_shape = part.order, part.local_shape
+    reduce_axes = part.reduce_axes
 
     def local_fn(stacked_local, factors):
         # shard_map delivers block-local arrays with a leading shard dim of 1
@@ -223,19 +327,290 @@ def make_distributed(spec: SpTTNSpec, plan: SpTTNPlan, coo: COOTensor,
             out = jax.lax.psum(out, a)
         return out
 
-    from repro.distributed.collectives import shard_map
-    fn = jax.jit(shard_map(
-        local_fn, mesh=mesh,
-        in_specs=(csf_specs, factor_specs),
-        out_specs=out_spec,
-        check_vma=False))
-
+    stacked, fn = _compile_shard_map(mesh, part, local_fn)
     dist = DistributedSpTTN(spec=spec, plan=plan, mesh=mesh,
                             mode_axis=dict(mode_axis), stacked=stacked,
-                            perm=np.concatenate(sorted_ids), fn=fn,
-                            factor_perm=factor_perm)
-    dist.nnz_per_shard = [c.nnz for c in csfs]
-    dist.max_nnz = max_nnz
+                            perm=part.perm, fn=fn,
+                            factor_perm=part.factor_perm)
+    dist.nnz_per_shard = [c.nnz for c in part.csfs]
+    dist.max_nnz = part.max_nnz
+    return dist
+
+
+# =========================================================================== #
+# Stacked-layout Pallas engine: one generated-kernel trace for all shards
+# =========================================================================== #
+def _plan_layout_walk(spec: SpTTNSpec, path, chains, row_for):
+    """Mirror the executor dispatch host-side: walk the plan tracking
+    which intermediates are FiberVals and at what CSF level, verify the
+    stacked zero-nnz padding stays inert, and collect the block-layout
+    requests the Pallas lowering will ask for at trace time.
+
+    Returns ``(stackable, requests)``.  ``stackable`` is False when some
+    sparse-structured stage has no operand that is provably zero on pad
+    fibers at the stage's own level — e.g. a broadcast-down lift
+    (``v.level < lvl``) would gather REAL ancestor rows onto pad fibers
+    and pollute the result.  ``requests`` holds ``("stage", lvl,
+    out_lvl)`` for row-lowered reductions and ``("chain", lvl0, levels)``
+    for fused chains (segsum/product stages need no precomputed layout).
+    ``row_for(lvl, out_lvl)`` is the executor's strategy choice;
+    ``chains`` its detected fused chains (empty when not fused).
+    """
+    spos = {i: k for k, i in enumerate(spec.sparse_indices)}
+
+    def slv(inds):
+        return max((spos[i] + 1 for i in inds if i in spos), default=0)
+
+    def is_prefix(inds):
+        sp = sorted(spos[i] for i in inds if i in spos)
+        return sp == list(range(len(sp)))
+
+    # name -> CSF level for every FiberVal intermediate; all tracked
+    # entries are zero-on-pads by induction (a stage with a same-level
+    # zero operand multiplies pads to zero, and the sorted pad-segment
+    # tails reduce those zeros into the final row)
+    fib_lvl = {spec.sparse_input.name: len(spec.sparse_indices)}
+    requests: list[tuple] = []
+    ok = True
+    tid, n = 0, len(path)
+    while tid < n:
+        chain = chains.get(tid)
+        if chain and len(chain) > 1:
+            terms = [path[k] for k in chain]
+            first = terms[0]
+            lvl0 = slv(first.indices)
+            levels = tuple(slv(t.out.indices) for t in terms)
+            if not any(fib_lvl.get(o.name) == lvl0
+                       for o in (first.lhs, first.rhs)):
+                ok = False
+            requests.append(("chain", lvl0, levels))
+            last = terms[-1]
+            if last.out.name != "OUT" and levels[-1] > 0:
+                fib_lvl[last.out.name] = levels[-1]
+            tid += len(chain)
+            continue
+        term = path[tid]
+        tid += 1
+        term_sp = any(i in spos for i in term.indices)
+        lvl, out_lvl = slv(term.indices), slv(term.out.indices)
+        fibs = [o.name for o in (term.lhs, term.rhs) if o.name in fib_lvl]
+        prefix_ok = is_prefix(term.indices) and is_prefix(term.out.indices)
+        is_final = term.out.name == "OUT"
+        if term_sp and fibs and (prefix_ok
+                                 or (is_final and is_prefix(term.indices))):
+            # fiber path / final scatter: needs one same-level zero operand
+            if not any(fib_lvl[nm] == lvl for nm in fibs):
+                ok = False
+            if prefix_ok:
+                if out_lvl < lvl and row_for(lvl, out_lvl):
+                    requests.append(("stage", lvl, out_lvl))
+                if not is_final and out_lvl > 0:
+                    fib_lvl[term.out.name] = out_lvl
+            # the final-scatter product stage and segsum reductions use
+            # no precomputed layout (coords/segs come straight from the
+            # stacked CSF arrays)
+        # else: dense fallback — densifying a tracked FiberVal scatters
+        # zeros for pad fibers (zero-on-pads by induction), so it's safe
+    return ok, requests
+
+
+def stackable_plan(spec: SpTTNSpec, path, fused: bool = False) -> bool:
+    """True when a plan can run through the stacked Pallas engine.
+
+    Structural check, no CSF needed: every sparse-structured stage must
+    consume at least one operand that is zero on padded fibers at the
+    stage's own CSF level (the sparse leaf values, or an intermediate
+    produced by such a stage).  Pad fibers then multiply to zero
+    everywhere and the zero-nnz tails of the stacked layout contribute
+    nothing on any shard — including entirely empty shard slots.  Dense
+    outputs only; :func:`make_distributed_tuned` falls back to replay
+    when this returns False."""
+    if spec.output_is_sparse:
+        return False
+    from repro.kernels.codegen.executor import fusible_chains
+    chains = fusible_chains(spec, path) if fused else {}
+    ok, _ = _plan_layout_walk(spec, path, chains, lambda lvl, out_lvl: False)
+    return ok
+
+
+def _stacked_layout_tables(part: MeshPartition, ex, requests):
+    """Precompute every shard's Pallas block layouts, pad them to the
+    mesh-wide maximum with inert blocks, and stack to ``(n_shards, ...)``
+    tables that ride into shard_map next to the CSF arrays.
+
+    Returns ``(extra_stacked, manifest)`` — the jnp tables plus the
+    recipe :func:`_install_stacked_layouts` uses to rebuild each shard's
+    layout-cache entries from traced local slices."""
+    from repro.kernels.codegen.executor import (chain_block_arrays,
+                                                chain_layout_key,
+                                                stage_layout_key)
+    from repro.kernels.util import (pad_segment_layout,
+                                    padded_segment_layout)
+
+    shard_views = []
+    for pk in part.packed:
+        seg = {(c, par): pk[f"seg_{c}_{par}"]
+               for c in range(1, part.order + 1) for par in range(0, c)}
+        shard_views.append(types.SimpleNamespace(seg=seg,
+                                                 nfib=dict(part.max_nfib)))
+
+    extra: dict[str, np.ndarray] = {}
+    manifest: list[tuple] = []
+    for req in requests:
+        if req[0] == "stage":
+            _, lvl, out_lvl = req
+            nseg = part.max_nfib[out_lvl] if out_lvl > 0 else 1
+            lays = [padded_segment_layout(v.seg[(lvl, out_lvl)], nseg,
+                                          ex.block) for v in shard_views]
+            pmax = max(l.padded_len for l in lays)
+            lays = [pad_segment_layout(l, pmax) for l in lays]
+            name = f"stage_{lvl}_{out_lvl}"
+            extra[f"{name}__gather"] = np.stack([l.gather for l in lays])
+            extra[f"{name}__mask"] = np.stack([l.mask for l in lays])
+            extra[f"{name}__bseg"] = np.stack([l.block_seg for l in lays])
+            extra[f"{name}__bfirst"] = np.stack([l.block_first
+                                                 for l in lays])
+            manifest.append(("stage", stage_layout_key(lvl, out_lvl,
+                                                       ex.block),
+                             name, nseg, 0))
+        else:
+            _, lvl0, levels = req
+            per = [chain_block_arrays(v, lvl0, levels, ex.block)
+                   for v in shard_views]
+            pmax = max(p[0].padded_len for p in per)
+            nbmax = pmax // ex.block
+            name = "chain_" + "_".join(map(str, (lvl0,) + levels))
+            gathers, masks = [], []
+            segs_j = [[] for _ in levels]
+            firsts_j = [[] for _ in levels]
+            lasts_j = [[] for _ in levels]
+            for lay, segs, firsts, lasts in per:
+                lay = pad_segment_layout(lay, pmax)
+                gathers.append(lay.gather)
+                masks.append(lay.mask)
+                for j in range(len(levels)):
+                    nb = nbmax - segs[j].shape[0]
+                    # inert appended blocks: edge segment id (contiguous
+                    # revisit of the final row), never first, never last
+                    # (no buffer reset, no flush)
+                    segs_j[j].append(np.pad(segs[j], (0, nb), mode="edge"))
+                    firsts_j[j].append(np.pad(firsts[j], (0, nb)))
+                    lasts_j[j].append(np.pad(lasts[j], (0, nb)))
+            extra[f"{name}__gather"] = np.stack(gathers)
+            extra[f"{name}__mask"] = np.stack(masks)
+            for j in range(len(levels)):
+                extra[f"{name}__seg{j}"] = np.stack(segs_j[j])
+                extra[f"{name}__first{j}"] = np.stack(firsts_j[j])
+                if j < len(levels) - 1:   # outermost flush is the grid end
+                    extra[f"{name}__last{j}"] = np.stack(lasts_j[j])
+            manifest.append(("chain", chain_layout_key(lvl0, levels,
+                                                       ex.block),
+                             name, part.max_nfib[levels[0]], len(levels)))
+    return {k: jnp.asarray(v) for k, v in extra.items()}, manifest
+
+
+def _install_stacked_layouts(arrays: CSFArrays, local: Mapping,
+                             manifest, block: int) -> None:
+    """Populate the executor's layout cache with this shard's traced
+    slices so the Pallas lowering never touches numpy at trace time.
+    The ``lay`` slot becomes a static stub carrying only ``nseg`` —
+    the one attribute the lowering reads from it."""
+    from repro.kernels.codegen.executor import (chain_cache_entry,
+                                                layout_cache,
+                                                stage_cache_entry)
+    from repro.kernels.util import PaddedSegments
+
+    cache = layout_cache(arrays)
+    empty_i = np.zeros(0, np.int32)
+    for kind, key, name, nseg, nlvl in manifest:
+        stub = PaddedSegments(gather=empty_i, mask=np.zeros(0, np.float32),
+                              block_seg=empty_i, block_first=empty_i,
+                              nseg=nseg, block=block)
+        if kind == "stage":
+            cache[key] = stage_cache_entry(
+                stub, local[f"{name}__gather"], local[f"{name}__mask"],
+                local[f"{name}__bseg"], local[f"{name}__bfirst"])
+        else:
+            cache[key] = chain_cache_entry(
+                stub, local[f"{name}__gather"], local[f"{name}__mask"],
+                tuple(local[f"{name}__seg{j}"] for j in range(nlvl)),
+                tuple(local[f"{name}__first{j}"] for j in range(nlvl)),
+                tuple(local[f"{name}__last{j}"] for j in range(nlvl - 1)))
+
+
+def make_distributed_pallas(spec: SpTTNSpec, plan: SpTTNPlan,
+                            coo: COOTensor, mesh: Mesh,
+                            mode_axis: dict[int, str], cyclic: bool = True,
+                            **executor_kwargs) -> DistributedSpTTN:
+    """The stacked Pallas engine: ONE generated-kernel trace inside
+    shard_map serves every shard, contracted-mode partials reduce with
+    psum — no host round trip, no per-shard retrace.
+
+    Pallas stages need concrete block-segment layouts at trace time,
+    which per-shard tracers cannot provide; instead each shard's layout
+    is precomputed on host from its padded CSF, padded to the mesh-wide
+    maximum with inert blocks, stacked, and passed through shard_map as
+    extra sharded inputs.  Inside the traced function the local slices
+    are re-installed into the executor's layout cache, turning the
+    scalar-prefetch operands into traced per-shard values under one
+    shared kernel trace.
+
+    ``plan`` must be homogeneous across shards (one schedule for all)
+    and pass :func:`stackable_plan`; extra kwargs reach
+    :class:`~repro.kernels.codegen.PallasPlanExecutor` (``block``,
+    ``strategy``, ``tile_align``, ``interpret``) — ``plan.fused`` and
+    ``plan.block`` are applied automatically like plan replay does.
+    """
+    if spec.output_is_sparse:
+        raise ValueError(
+            "make_distributed_pallas requires a dense output; same-"
+            "sparsity (TTTP-like) outputs go through make_distributed")
+    from repro.kernels.codegen import PallasPlanExecutor
+
+    part = partition_mesh(spec, coo, mesh, mode_axis, cyclic=cyclic)
+    kw = dict(executor_kwargs)
+    if plan.fused:
+        kw.setdefault("strategy", "fused")
+    if getattr(plan, "block", None):
+        kw.setdefault("block", plan.block)
+    ex = PallasPlanExecutor(part.local_spec, plan.path, plan.order, **kw)
+
+    nfib_stub = types.SimpleNamespace(nfib=dict(part.max_nfib))
+    ok, requests = _plan_layout_walk(
+        spec, plan.path, ex._chains,
+        lambda lvl, out_lvl: ex.strategy_for(nfib_stub, lvl,
+                                             out_lvl) == "row")
+    if not ok:
+        raise ValueError(
+            "plan is not stackable: some sparse-structured stage has no "
+            "operand that is zero on padded fibers at its own CSF level, "
+            "so the stacked zero-nnz tails would pollute the result — "
+            "check stackable_plan() first and fall back to replay")
+    extra, manifest = _stacked_layout_tables(part, ex, requests)
+
+    nfib_static = dict(part.max_nfib)
+    order, local_shape = part.order, part.local_shape
+    reduce_axes = part.reduce_axes
+    block = ex.block
+
+    def local_fn(stacked_local, factors):
+        local = {k: v.reshape(v.shape[1:]) for k, v in stacked_local.items()}
+        arrays = _unpack_csf(local, order, nfib_static, local_shape)
+        _install_stacked_layouts(arrays, local, manifest, block)
+        out = ex(arrays, factors)
+        for a in reduce_axes:
+            out = jax.lax.psum(out, a)
+        return out
+
+    stacked, fn = _compile_shard_map(mesh, part, local_fn, extra)
+    dist = DistributedSpTTN(spec=spec, plan=plan, mesh=mesh,
+                            mode_axis=dict(mode_axis), stacked=stacked,
+                            perm=part.perm, fn=fn,
+                            factor_perm=part.factor_perm)
+    dist.nnz_per_shard = [c.nnz for c in part.csfs]
+    dist.max_nnz = part.max_nnz
+    dist.executor = ex           # inspection: emitted stages / strategies
+    dist.layout_manifest = manifest
     return dist
 
 
@@ -321,18 +696,26 @@ class TunedShard:
     fn: object | None = None     # factors -> partial output
 
 
+#: the three distributed execution modes a tuned replay can land on
+DIST_MODES = ("collective", "collective-pallas", "replay")
+
+
 @dataclasses.dataclass
 class DistributedPlanReplay:
     """Distributed SpTTN execution with per-shard tuned plans.
 
-    ``mode`` is ``"collective"`` when every shard's winner agreed on one
-    XLA schedule — execution then goes through the shard_map engine
-    (:func:`make_distributed`), psum included; otherwise ``"replay"``:
-    each shard executes its own tuned plan via its compiled backend
-    (``reference``/``xla``/``pallas``) and the dense partials are summed
-    host-side (exact, because shards keep global coordinates).  Calling
-    the object always returns the **global** dense output, so results are
-    directly comparable against ``reference_execute``/``dense_oracle``.
+    ``mode`` is one of :data:`DIST_MODES`: ``"collective"`` when every
+    shard's winner agreed on one XLA schedule — execution then goes
+    through the shard_map engine (:func:`make_distributed`), psum
+    included; ``"collective-pallas"`` when they agreed on one *Pallas*
+    schedule whose plan passes :func:`stackable_plan` — one generated-
+    kernel trace inside shard_map (:func:`make_distributed_pallas`),
+    psum included; otherwise ``"replay"``: each shard executes its own
+    tuned plan via its compiled backend (``reference``/``xla``/
+    ``pallas``) and the dense partials are summed host-side (exact,
+    because shards keep global coordinates).  Calling the object always
+    returns the **global** dense output, so results are directly
+    comparable against ``reference_execute``/``dense_oracle``.
     """
 
     spec: SpTTNSpec
@@ -361,7 +744,7 @@ class DistributedPlanReplay:
         return [sh.nnz for sh in self.shards]
 
     def __call__(self, factors: Mapping) -> np.ndarray:
-        if self.mode == "collective":
+        if self.mode in ("collective", "collective-pallas"):
             out = np.asarray(self.collective(factors))
             if self._undo is None:
                 self._undo = undo_cyclic_plan(self.spec, self.mode_axis,
@@ -383,6 +766,21 @@ class DistributedPlanReplay:
         return total
 
 
+def _annotate_dist_mode(cache_dir, shards, mode: str) -> None:
+    """Record the distributed mode the tuned plans were routed through
+    into each live shard's plan-cache entry meta — the tuner's timings
+    then tell the whole story (which backend won AND how it executed on
+    the mesh) without re-deriving the routing."""
+    if cache_dir is None:
+        return
+    from repro.autotune.cache import PlanCache
+    cache = PlanCache(cache_dir)
+    for sh in shards:
+        key = getattr(sh.stats, "cache_key", "") if sh.stats else ""
+        if key:
+            cache.annotate(key, dist_mode=mode)
+
+
 def make_distributed_tuned(spec: SpTTNSpec, coo: COOTensor, mesh: Mesh,
                            mode_axis: Mapping[int, str],
                            cache_dir: str | None = None,
@@ -396,11 +794,15 @@ def make_distributed_tuned(spec: SpTTNSpec, coo: COOTensor, mesh: Mesh,
     autotuner on the *shard's local nnz profile* under a mesh-extended
     cache key (:func:`shard_mesh_key` via ``TunerConfig.mesh``) → execute
     every shard through its winner's backend → reduce the partial
-    outputs.  When all shards agree on one XLA schedule (the common case
-    for well-balanced partitions) and ``prefer_collective`` is set, the
-    reduction is the collective engine's psum (:func:`make_distributed`);
-    heterogeneous or non-XLA winners replay shard-by-shard with a
-    host-side sum.
+    outputs.  When all shards agree on one schedule (the common case for
+    well-balanced partitions) and ``prefer_collective`` is set, the
+    reduction is a shard_map psum: XLA winners go through
+    :func:`make_distributed`, Pallas winners whose plan passes
+    :func:`stackable_plan` through :func:`make_distributed_pallas` (one
+    kernel trace for all shards); heterogeneous or non-stackable winners
+    replay shard-by-shard with a host-side sum.  The chosen mode is
+    recorded into each live shard's plan-cache entry meta
+    (``dist_mode``) when ``cache_dir`` is given.
 
     ``tuner`` is a :class:`repro.autotune.TunerConfig` template (its
     ``mesh`` field is overwritten per shard); extra kwargs reach the
@@ -450,8 +852,22 @@ def make_distributed_tuned(spec: SpTTNSpec, coo: COOTensor, mesh: Mesh,
                                            dict(mode_axis), cyclic=cyclic)
         for sh in live:          # shard_map holds its own stacked layout
             sh.csf = None
+        _annotate_dist_mode(cache_dir, live, dist.mode)
+        return dist
+    if (prefer_collective and homogeneous and first.backend == "pallas"
+            and stackable_plan(spec, first.path, fused=first.fused)):
+        # homogeneous Pallas winners: one kernel trace for all shards,
+        # replaying the tuned fused/block axes from the cache entries
+        dist.mode = "collective-pallas"
+        dist.collective = make_distributed_pallas(
+            spec, first, coo, mesh, dict(mode_axis), cyclic=cyclic,
+            **executor_kwargs)
+        for sh in live:          # shard_map holds its own stacked layout
+            sh.csf = None
+        _annotate_dist_mode(cache_dir, live, dist.mode)
         return dist
 
+    _annotate_dist_mode(cache_dir, live, "replay")
     for sh in live:
         kw = dict(executor_kwargs) if sh.plan.backend == "pallas" else {}
         if sh.plan.backend == "pallas" and sh.plan.fused:

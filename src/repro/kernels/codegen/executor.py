@@ -134,6 +134,81 @@ class SegmentProfile:
         return self.row_decision(self.nfib, self.nseg, block)
 
 
+# --------------------------------------------------------------------- #
+# Static layout cache (pattern-fixed, stored on the CSFArrays instance)
+#
+# Entry formats — owned here so every producer agrees with the consumers
+# in ``_fiber_contract`` / ``_exec_chain``:
+#   stage key (lvl, out_lvl, block) ->
+#       (lay, gather, mask[:, None], block_seg, block_first)
+#   chain key ("chain", lvl0, levels, block) ->
+#       (lay, gather, mask[:, None], segs, firsts, lasts[:-1])
+# ``lay`` is consulted only for its static ``nseg`` at trace time; the
+# array slots may be jnp constants (single-device path) OR traced values
+# (the stacked distributed engine pre-populates the cache inside
+# shard_map with per-shard slices of mesh-stacked layouts, which is what
+# lets ONE kernel trace serve every shard).
+# --------------------------------------------------------------------- #
+def layout_cache(csf: CSFArrays) -> dict:
+    """The per-operand static layout cache (created on first use)."""
+    return csf.__dict__.setdefault("_codegen_layouts", {})
+
+
+def stage_layout_key(lvl: int, out_lvl: int, block: int) -> tuple:
+    return (lvl, out_lvl, block)
+
+
+def chain_layout_key(lvl0: int, levels: tuple, block: int) -> tuple:
+    return ("chain", lvl0, tuple(levels), block)
+
+
+def stage_cache_entry(lay, gather, mask, block_seg, block_first) -> tuple:
+    """Assemble a row-stage cache entry; ``mask`` is the flat (P,) mask
+    (the trailing unit lane is added here)."""
+    return (lay, gather, mask[:, None], block_seg, block_first)
+
+
+def chain_cache_entry(lay, gather, mask, segs, firsts, lasts) -> tuple:
+    """Assemble a fused-chain cache entry; ``lasts`` excludes the
+    outermost level (the final flush is the grid's end)."""
+    return (lay, gather, mask[:, None], tuple(segs), tuple(firsts),
+            tuple(lasts))
+
+
+def chain_block_arrays(csf, lvl0: int, levels: tuple, block: int):
+    """Numpy block-level chain layout: padded innermost layout plus the
+    per-block segment ids / first flags / last flags at every chain
+    level (``lasts`` covers all levels; ``_chain_layout`` drops the
+    outermost).  ``csf`` needs only ``.seg`` and ``.nfib``, so the
+    stacked distributed engine can feed padded per-shard numpy arrays
+    through the same math it would trace with.
+    """
+    seg0 = np.asarray(csf.seg[(lvl0, levels[0])])
+    lay = padded_segment_layout(seg0, csf.nfib[levels[0]], block)
+
+    def firsts_of(seg: np.ndarray) -> np.ndarray:
+        f = np.zeros(len(seg), np.int32)
+        f[0] = 1
+        f[1:] = seg[1:] != seg[:-1]
+        return f
+
+    def lasts_of(seg: np.ndarray) -> np.ndarray:
+        l = np.zeros(len(seg), np.int32)
+        l[-1] = 1
+        l[:-1] = seg[1:] != seg[:-1]
+        return l
+
+    segs = [lay.block_seg.astype(np.int32)]
+    for prev, lvl in zip(levels, levels[1:]):
+        up = (np.asarray(csf.seg[(prev, lvl)])[segs[-1]] if lvl > 0
+              else np.zeros_like(segs[-1]))
+        segs.append(up.astype(np.int32))
+    firsts = [lay.block_first.astype(np.int32)] + \
+        [firsts_of(s) for s in segs[1:]]
+    lasts = [lasts_of(s) for s in segs]
+    return lay, segs, firsts, lasts
+
+
 def segment_profile(csf: CSFArrays, lvl: int, out_lvl: int) -> SegmentProfile:
     """Profile the ``(lvl, out_lvl)`` segment map of ``csf`` (pattern-
     static; concrete per operand, hence per shard).  ``max_seg`` and
@@ -209,16 +284,15 @@ class PallasPlanExecutor(VectorizedExecutor):
 
     # -- static layouts (pattern-fixed, cached on the CSFArrays) -------- #
     def _layout(self, csf: CSFArrays, lvl: int, out_lvl: int):
-        cache = csf.__dict__.setdefault("_codegen_layouts", {})
-        key = (lvl, out_lvl, self.block)
+        cache = layout_cache(csf)
+        key = stage_layout_key(lvl, out_lvl, self.block)
         if key not in cache:
             seg = np.asarray(csf.seg[(lvl, out_lvl)])
             nseg = csf.nfib[out_lvl] if out_lvl > 0 else 1
             lay = padded_segment_layout(seg, nseg, self.block)
-            cache[key] = (lay, jnp.asarray(lay.gather),
-                          jnp.asarray(lay.mask)[:, None],
-                          jnp.asarray(lay.block_seg),
-                          jnp.asarray(lay.block_first))
+            cache[key] = stage_cache_entry(
+                lay, jnp.asarray(lay.gather), jnp.asarray(lay.mask),
+                jnp.asarray(lay.block_seg), jnp.asarray(lay.block_first))
         return cache[key]
 
     def strategy_for(self, csf: CSFArrays, lvl: int, out_lvl: int) -> str:
@@ -255,38 +329,17 @@ class PallasPlanExecutor(VectorizedExecutor):
         MTTKRP's ``(2, 1)``); nesting of the CSF segment maps makes each
         outer array a composition of the inner one.
         """
-        cache = csf.__dict__.setdefault("_codegen_layouts", {})
-        key = ("chain", lvl0, levels, self.block)
+        cache = layout_cache(csf)
+        key = chain_layout_key(lvl0, levels, self.block)
         if key in cache:
             return cache[key]
-        seg0 = np.asarray(csf.seg[(lvl0, levels[0])])
-        lay = padded_segment_layout(seg0, csf.nfib[levels[0]], self.block)
-
-        def firsts_of(seg: np.ndarray) -> np.ndarray:
-            f = np.zeros(len(seg), np.int32)
-            f[0] = 1
-            f[1:] = seg[1:] != seg[:-1]
-            return f
-
-        def lasts_of(seg: np.ndarray) -> np.ndarray:
-            l = np.zeros(len(seg), np.int32)
-            l[-1] = 1
-            l[:-1] = seg[1:] != seg[:-1]
-            return l
-
-        segs = [lay.block_seg.astype(np.int32)]
-        for prev, lvl in zip(levels, levels[1:]):
-            up = (np.asarray(csf.seg[(prev, lvl)])[segs[-1]] if lvl > 0
-                  else np.zeros_like(segs[-1]))
-            segs.append(up.astype(np.int32))
-        firsts = [lay.block_first.astype(np.int32)] + \
-            [firsts_of(s) for s in segs[1:]]
-        lasts = [lasts_of(s) for s in segs]
-        entry = (lay, jnp.asarray(lay.gather),
-                 jnp.asarray(lay.mask)[:, None],
-                 tuple(jnp.asarray(s) for s in segs),
-                 tuple(jnp.asarray(f) for f in firsts),
-                 tuple(jnp.asarray(l) for l in lasts[:-1]))
+        lay, segs, firsts, lasts = chain_block_arrays(csf, lvl0, levels,
+                                                      self.block)
+        entry = chain_cache_entry(
+            lay, jnp.asarray(lay.gather), jnp.asarray(lay.mask),
+            tuple(jnp.asarray(s) for s in segs),
+            tuple(jnp.asarray(f) for f in firsts),
+            tuple(jnp.asarray(l) for l in lasts[:-1]))
         cache[key] = entry
         return entry
 

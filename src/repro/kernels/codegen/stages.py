@@ -159,6 +159,18 @@ def _lane_padded(arr: jnp.ndarray, width: int) -> jnp.ndarray:
     return jnp.pad(arr, ((0, 0), (0, width - arr.shape[-1])))
 
 
+def _check_block_grid(padded_len: int, block: int) -> None:
+    """The sequential grid covers ``padded_len // block`` blocks; a
+    non-multiple length would silently drop the tail slots, so fail
+    loudly instead (layout producers — ``padded_segment_layout``,
+    ``pad_segment_layout``, the stacked distributed padding — all
+    guarantee block multiples)."""
+    if padded_len % block:
+        raise ValueError(
+            f"padded operand length {padded_len} is not a multiple of "
+            f"the stage block {block}")
+
+
 def _load_operands(stage: Stage, in_refs, mask_ref):
     """Read each operand block and restore its dense shape; the mask is
     folded into the first fiber operand so pad slots contribute zero.
@@ -188,7 +200,17 @@ def run_reduce_stage(stage: Stage, block_seg: jnp.ndarray,
                      padded, dtype) -> jnp.ndarray:
     """Fused contract-and-accumulate: grid over padded fiber blocks, output
     row (the crossing buffer) resident in VMEM and revisited across its
-    blocks; ``block_first`` fires the Algorithm-2 reset."""
+    blocks; ``block_first`` fires the Algorithm-2 reset.
+
+    ``block_seg``/``block_first``/``mask`` may be traced values, not just
+    host constants: the stacked distributed engine feeds per-shard slices
+    of mesh-stacked layouts through here so one trace serves every shard.
+    Only the grid extent must be static — the index maps (``bs[i]``)
+    handle dynamic block→row assignment.  Inert trailing blocks appended
+    by cross-shard padding (mask 0, ``block_first`` 0, edge-value
+    ``block_seg``) revisit the final output row and add zero, so the
+    revisit runs of the output BlockSpec stay contiguous.
+    """
 
     acc_t = accumulator_type(dtype)
     tile = stage.tile
@@ -197,6 +219,7 @@ def run_reduce_stage(stage: Stage, block_seg: jnp.ndarray,
         padded = [_lane_padded(a, stage.op_pad(op))
                   for a, op in zip(padded, stage.operands)]
     out_pad = stage.out_pad
+    _check_block_grid(mask.shape[0], stage.block)
 
     def kernel(bs_ref, bf_ref, *refs):
         m_ref = None if tile else refs[0]
@@ -265,6 +288,7 @@ def run_product_stage(stage: Stage, padded, dtype) -> jnp.ndarray:
         o_ref[...] = part.astype(o_ref.dtype)
 
     P = next(a.shape[0] for a, op in zip(padded, stage.operands) if op.fiber)
+    _check_block_grid(P, stage.block)
     in_specs = []
     for op in stage.operands:
         w = stage.op_pad(op)
@@ -411,6 +435,7 @@ def run_fused_chain_stage(stage: Stage, links: tuple[ChainLink, ...],
                 dst[...] += out.astype(dst.dtype)
 
     P = mask.shape[0]
+    _check_block_grid(P, stage.block)
     in_specs = []
     if not tile:
         in_specs.append(pl.BlockSpec((stage.block, 1), lambda i, *s: (i, 0)))

@@ -68,5 +68,33 @@ def padded_segment_layout(seg: np.ndarray, nseg: int,
                           block_first=block_first, nseg=nseg, block=block)
 
 
+def pad_segment_layout(lay: PaddedSegments,
+                       padded_len: int) -> PaddedSegments:
+    """Extend a layout with inert trailing blocks up to ``padded_len``.
+
+    The stacked distributed engine pads every shard's layout to the
+    mesh-wide maximum so one kernel trace serves all shards.  Appended
+    slots gather nonzero 0 under mask 0 (contribute nothing) and appended
+    blocks replicate the final block's segment id with ``block_first=0``,
+    so they re-visit the already-initialized last output row and add an
+    all-masked (zero) partial — the output BlockSpec's revisit runs stay
+    contiguous and every row keeps its exact value.
+    """
+    if padded_len == lay.padded_len:
+        return lay
+    if padded_len < lay.padded_len or padded_len % lay.block:
+        raise ValueError(
+            f"padded_len {padded_len} must be a multiple of block "
+            f"{lay.block} and >= current length {lay.padded_len}")
+    extra = padded_len - lay.padded_len
+    nblocks = padded_len // lay.block - lay.nblocks
+    return PaddedSegments(
+        gather=np.pad(lay.gather, (0, extra)),
+        mask=np.pad(lay.mask, (0, extra)),
+        block_seg=np.pad(lay.block_seg, (0, nblocks), mode="edge"),
+        block_first=np.pad(lay.block_first, (0, nblocks)),
+        nseg=lay.nseg, block=lay.block)
+
+
 def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m

@@ -201,18 +201,27 @@ factors = {{t.name: jnp.asarray(rng.standard_normal(
 mesh = jax.make_mesh((2,), ("data",))
 cfg = TunerConfig(max_paths=2, max_candidates=1, orders_per_path=1,
                   warmup=1, repeats=2, backends=("pallas",))
+ref = dense_oracle(spec, csf,
+                   {{k: np.asarray(v) for k, v in factors.items()}})
+
+# homogeneous pallas winner (one live shard) -> the stacked shard_map
+# engine, whose empty slot is all padding and contributes zero
 dist = make_distributed_tuned(spec, coo, mesh, {{0: "data"}},
                               cache_dir={str(tmp_path)!r}, tuner=cfg,
                               block=8)
-assert dist.mode == "replay"
+assert dist.mode == "collective-pallas"
 assert dist.nnz_per_shard == [coo.nnz, 0]
 assert dist.shards[1].plan is None and dist.shards[1].stats is None
 assert dist.shards[0].plan is not None
-out = dist(factors)
-np.testing.assert_allclose(
-    out, dense_oracle(spec, csf,
-                      {{k: np.asarray(v) for k, v in factors.items()}}),
-    atol=1e-5)
+np.testing.assert_allclose(dist(factors), ref, atol=1e-5)
+
+# shard-by-shard replay (prefer_collective=False) skips the empty shard
+distr = make_distributed_tuned(spec, coo, mesh, {{0: "data"}},
+                               cache_dir={str(tmp_path)!r}, tuner=cfg,
+                               block=8, prefer_collective=False)
+assert distr.mode == "replay"
+assert distr.shards[1].fn is None
+np.testing.assert_allclose(distr(factors), ref, atol=1e-5)
 print("EMPTY-SHARD-OK")
 """
     out = run_with_devices(code, 2)

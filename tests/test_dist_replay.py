@@ -99,8 +99,9 @@ for name, spec, shape in [
     np.testing.assert_allclose(dist2(factors), ref, atol=1e-5)
     print(name.upper() + "-REPLAY-OK", dist.mode)
 
-# forced-pallas axis: heterogeneous-from-collective path — every shard
-# replays through the generated-kernel backend, same answer
+# forced-pallas axis: a homogeneous generated-kernel winner now routes
+# through the stacked shard_map engine (one kernel trace for all shards);
+# prefer_collective=False still exercises shard-by-shard replay
 spec = S.mttkrp(16, 12, 10, 8)
 T = random_sparse((16, 12, 10), 0.1, seed=2)
 csf = build_csf(T)
@@ -110,7 +111,7 @@ factors = {{t.name: jnp.asarray(rng.standard_normal(
 forced = TunerConfig(max_paths=2, max_candidates=1, orders_per_path=1,
                      warmup=1, repeats=2, backends=("pallas",))
 distp = make_distributed_tuned(spec, T, mesh, {{0: "data"}}, tuner=forced,
-                               block=8)
+                               block=8, prefer_collective=False)
 assert distp.mode == "replay"
 assert all(b == "pallas" for b in distp.backends if b is not None)
 single = plan(spec, nnz_levels=csf.nnz_levels())

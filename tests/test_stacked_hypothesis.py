@@ -1,0 +1,79 @@
+"""Hypothesis properties of the stacked shard padding (DESIGN.md §7).
+
+Host-side only — ``partition_mesh`` reads nothing from the mesh but its
+axis sizes, so a plain namespace stands in and no fake devices are
+needed.  Properties: (1) ``unpad_local_csf`` inverts ``_pad_local_csf``
+bit-exactly for every shard (padding is strictly appended, never mixed
+into real slots); (2) each stacked row IS the shard's padded CSF and its
+segment tails stay sorted ascending — the precondition of both the
+Pallas block layouts (``padded_segment_layout``) and
+``segment_sum(indices_are_sorted=True)``.
+
+Skipped wholesale where hypothesis is not installed (the CI full lane
+has it; minimal local envs may not).
+"""
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import spec as S
+from repro.distributed import unpad_local_csf
+from repro.distributed.spttn_dist import _pad_local_csf, partition_mesh
+from repro.sparse import random_sparse
+from repro.sparse.csf import level_segments
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+def _fake_mesh(n):
+    return types.SimpleNamespace(shape={"data": n})
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), nshards=st.sampled_from([1, 2, 3, 4]),
+       density=st.floats(0.02, 0.4))
+def test_pad_unpad_round_trip(seed, nshards, density):
+    spec = S.mttkrp(13, 9, 7, 4)
+    T = random_sparse((13, 9, 7), density, seed=seed)
+    if T.nnz == 0:
+        return
+    part = partition_mesh(spec, T, _fake_mesh(nshards), {0: "data"})
+    for s, csf in enumerate(part.csfs):
+        back = unpad_local_csf(part.packed[s], csf.order, csf.nnz, csf.nfib)
+        np.testing.assert_array_equal(back["values"], csf.values)
+        for p in range(1, csf.order + 1):
+            fc = csf.fiber_coords(p)
+            for m in range(p):
+                np.testing.assert_array_equal(back[f"coord_{p}_{m}"],
+                                              fc[:, m])
+        for child in range(1, csf.order + 1):
+            for par in range(0, child):
+                np.testing.assert_array_equal(
+                    back[f"seg_{child}_{par}"],
+                    level_segments(csf, child, par))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), nshards=st.sampled_from([1, 2, 4]),
+       density=st.floats(0.02, 0.4))
+def test_stacked_layout_agrees_with_per_shard_csf(seed, nshards, density):
+    spec = S.mttkrp(13, 9, 7, 4)
+    T = random_sparse((13, 9, 7), density, seed=seed)
+    if T.nnz == 0:
+        return
+    part = partition_mesh(spec, T, _fake_mesh(nshards), {0: "data"})
+    stacked = {k: np.asarray(v) for k, v in part.stacked.items()}
+    total = 0
+    for s, csf in enumerate(part.csfs):
+        row = {k: stacked[k][s] for k in stacked}
+        fresh = _pad_local_csf(csf, part.max_nnz, part.max_nfib)
+        for k in fresh:
+            np.testing.assert_array_equal(row[k], fresh[k])
+        for child in range(1, csf.order + 1):
+            for par in range(1, child):
+                seg = row[f"seg_{child}_{par}"]
+                assert (np.diff(seg) >= 0).all(), (s, child, par, seg)
+        total += csf.nnz
+    assert total == T.nnz        # partition is a disjoint cover

@@ -367,7 +367,8 @@ def test_distributed_replay_honors_per_shard_block(tmp_path):
                       warmup=1, repeats=2, backends=("pallas",),
                       blocks=(16,))
     dist = make_distributed_tuned(spec, T, mesh, {0: "data"},
-                                  cache_dir=str(tmp_path), tuner=cfg)
+                                  cache_dir=str(tmp_path), tuner=cfg,
+                                  prefer_collective=False)
     assert dist.mode == "replay"
     live = [sh for sh in dist.shards if sh.plan is not None]
     assert live and all(sh.plan.backend == "pallas" and sh.plan.block == 16
@@ -376,3 +377,9 @@ def test_distributed_replay_honors_per_shard_block(tmp_path):
     ref = reference_execute(spec, single.path, single.order, csf,
                             {k: np.asarray(v) for k, v in factors.items()})
     np.testing.assert_allclose(dist(factors), ref, atol=1e-4)
+    # the stacked route (default) replays the tuned block mesh-wide
+    dist2 = make_distributed_tuned(spec, T, mesh, {0: "data"},
+                                   cache_dir=str(tmp_path), tuner=cfg)
+    assert dist2.mode == "collective-pallas"
+    assert dist2.collective.executor.block == 16
+    np.testing.assert_allclose(dist2(factors), ref, atol=1e-4)
