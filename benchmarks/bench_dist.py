@@ -20,8 +20,13 @@ import sys
 from benchmarks.common import emit
 
 SNIPPET = """
-import json, os, tempfile, time
-import numpy as np, jax, jax.numpy as jnp
+import json
+import os
+import tempfile
+import time
+import numpy as np
+import jax
+import jax.numpy as jnp
 from repro.autotune import TunerConfig
 from repro.core import spec as S
 from repro.core.executor import CSFArrays, make_executor

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
 from repro.core import spec as S
-from repro.core.cost import ConstrainedBlas, MaxBufferDim
+from repro.core.cost import ConstrainedBlas
 from repro.core.executor import CSFArrays, VectorizedExecutor
 from repro.core.order_dp import OrderDP
 from repro.core.paths import min_depth_paths
@@ -29,13 +29,11 @@ def run(N: int = 256, R: int = 32, Sdim: int = 32, density: float = 1e-3):
                "V": jnp.asarray(rng.standard_normal((N, Sdim)).astype(np.float32))}
     arrays = CSFArrays.from_csf(csf)
 
-    # pick the T.V-first path; get both cost models' orders
+    # pick the T.V-first path; the BLAS-friendly order
     path = next(p for p in min_depth_paths(spec)
                 if "(T.V)" in p[0].out.name)
     blas_order = OrderDP(path, ConstrainedBlas(2), spec.dims,
                          spec.sparse_indices).solve().order
-    scalar_order = OrderDP(path, MaxBufferDim(), spec.dims,
-                           spec.sparse_indices).solve().order
 
     ex = VectorizedExecutor(spec, path, blas_order)
     fn_blas = jax.jit(lambda f: ex(arrays, f))
@@ -43,7 +41,6 @@ def run(N: int = 256, R: int = 32, Sdim: int = 32, density: float = 1e-3):
 
     # scalar-intermediate emulation: loop over s, contract per iteration
     vals = arrays.values
-    j_at = arrays.fiber_coord[3][1]
     k_at = arrays.fiber_coord[3][2]
     seg2 = arrays.seg[(3, 2)]
     j_of_f2 = arrays.fiber_coord[2][1]

@@ -25,8 +25,12 @@ import sys
 from benchmarks.common import emit
 
 SNIPPET = """
-import json, os, time
-import numpy as np, jax, jax.numpy as jnp
+import json
+import os
+import time
+import numpy as np
+import jax
+import jax.numpy as jnp
 from repro.core import spec as S
 from repro.core.planner import plan
 from repro.distributed.spttn_dist import (make_distributed,

@@ -54,7 +54,7 @@ def main() -> int:
                             bench_moe_dispatch, bench_mttkrp,
                             bench_outofcore, bench_search,
                             bench_serve_latency, bench_strong_scaling,
-                            bench_tttc, bench_tttp, bench_ttmc)
+                            bench_ttmc, bench_tttc, bench_tttp)
 
     suites = [
         ("mttkrp", lambda: bench_mttkrp.run(scale=scale)),

@@ -10,6 +10,7 @@ import argparse
 import time
 
 import numpy as np
+
 import jax
 import jax.numpy as jnp
 

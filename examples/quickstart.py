@@ -8,6 +8,7 @@ top-level ``repro`` facade.
 import os
 
 import numpy as np
+
 import jax.numpy as jnp
 
 from repro import (CSFArrays, build_csf, dense_oracle, execute_plan,

@@ -4,6 +4,7 @@ prefill + decode with a shared compiled decode step.
     PYTHONPATH=src python examples/serve_lm.py
 """
 import numpy as np
+
 import jax
 
 from repro.configs import get_reduced

@@ -5,10 +5,11 @@ cost-dominant kernels are TTTP (residual, Eq. 3) and MTTKRP-like products
     PYTHONPATH=src python examples/tensor_completion.py
 """
 import numpy as np
+
 import jax
 import jax.numpy as jnp
 
-from repro import (CSFArrays, build_csf, make_executor, parse, plan,
+from repro import (CSFArrays, build_csf, make_executor, plan,
                    random_sparse, tttp3)
 
 

@@ -7,11 +7,12 @@ executed by the framework, one mode-permuted CSF per mode (as SPLATT does).
 import argparse
 
 import numpy as np
+
 import jax
 import jax.numpy as jnp
 
 from repro import (CSFArrays, build_csf, make_executor, parse, plan,
-                   random_sparse, tttp3)
+                   random_sparse)
 
 
 def main(steps: int = 8, ranks=(8, 6, 4), autotune: bool = False,

@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Pyright ratchet for the CI static-analysis lane.
+
+Runs ``pyright --outputjson`` (scoped by ``pyrightconfig.json`` to the
+typed core: ``src/repro/core/`` + ``src/repro/analysis/``, basic mode)
+and compares per-rule error counts against the committed baseline
+``pyright_baseline.json``.  The gate is a ratchet, not a cliff: a rule's
+count may only stay or fall; any rise fails the lane with the offending
+diagnostics printed.
+
+Seeding semantics (mirrors check_bench_regression.py): a missing
+baseline — or one with ``"seeded": false`` — reports counts and passes,
+so enabling the lane never blocks on pre-existing debt.  Run with
+``--update`` (in an environment with pyright and the runtime deps
+installed, so imports resolve) to write a seeded baseline and start
+gating.  Pyright absent entirely → pass with a note, keeping local
+minimal environments green.
+
+Usage:
+  python scripts/check_pyright_baseline.py [--update] [--baseline PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(REPO, "pyright_baseline.json")
+
+
+def run_pyright() -> dict | None:
+    exe = shutil.which("pyright")
+    if exe is None:
+        return None
+    proc = subprocess.run([exe, "--outputjson"], cwd=REPO,
+                          capture_output=True, text=True)
+    # pyright exits 1 when it reports errors; the JSON is still complete
+    try:
+        return json.loads(proc.stdout)
+    except json.JSONDecodeError:
+        print("pyright produced no JSON:", file=sys.stderr)
+        sys.stderr.write(proc.stdout[-2000:] + proc.stderr[-2000:])
+        raise
+
+
+def rule_counts(report: dict) -> dict[str, int]:
+    counts: dict[str, int] = {}
+    for d in report.get("generalDiagnostics", []):
+        if d.get("severity") != "error":
+            continue
+        rule = d.get("rule", "unclassified")
+        counts[rule] = counts.get(rule, 0) + 1
+    return counts
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--update", action="store_true",
+                    help="write a seeded baseline from this run's counts")
+    args = ap.parse_args(argv)
+
+    report = run_pyright()
+    if report is None:
+        print("pyright not installed; static-type ratchet skipped — pass")
+        return 0
+    counts = rule_counts(report)
+    version = report.get("version", "?")
+    total = sum(counts.values())
+    print(f"pyright {version}: {total} error(s) across "
+          f"{len(counts)} rule(s) in the typed core")
+    for rule, n in sorted(counts.items()):
+        print(f"  {rule}: {n}")
+
+    if args.update:
+        with open(args.baseline, "w") as f:
+            json.dump({"seeded": True, "pyright_version": version,
+                       "counts": counts}, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baseline written to {args.baseline} (seeded)")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print("no committed baseline; seeding run — pass "
+              "(run with --update to start gating)")
+        return 0
+    with open(args.baseline) as f:
+        base = json.load(f)
+    if not base.get("seeded", False):
+        print("baseline present but unseeded; counts reported, not "
+              "gated — pass (run with --update to start gating)")
+        return 0
+
+    base_counts = base.get("counts", {})
+    regressed = {r: (base_counts.get(r, 0), n)
+                 for r, n in counts.items() if n > base_counts.get(r, 0)}
+    for r, (old, new) in sorted(regressed.items()):
+        print(f"RATCHET {r}: {old} -> {new}")
+        for d in report.get("generalDiagnostics", []):
+            if d.get("severity") == "error" and \
+                    d.get("rule", "unclassified") == r:
+                rng = d.get("range", {}).get("start", {})
+                print(f"    {d.get('file')}:{rng.get('line', 0) + 1}: "
+                      f"{d.get('message', '').splitlines()[0]}")
+    improved = [r for r, n in base_counts.items()
+                if counts.get(r, 0) < n]
+    if improved:
+        print(f"improved rules (re-run --update to tighten the ratchet): "
+              f"{sorted(improved)}")
+    if regressed:
+        print(f"FAIL: {len(regressed)} rule(s) above baseline",
+              file=sys.stderr)
+        return 1
+    print("check_pyright_baseline: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import importlib
 
-__version__ = "0.7.0"
+__version__ = "0.8.0"
 
 # name -> defining module (the single source of truth for __all__)
 _EXPORTS = {
@@ -60,6 +60,11 @@ _EXPORTS = {
     "TunerConfig": "repro.autotune.tuner",
     "SearchStats": "repro.autotune.tuner",
     "PlanCache": "repro.autotune.cache",
+    # static plan verification (repro.analysis, DESIGN.md §11)
+    "verify_plan": "repro.analysis",
+    "Diagnostic": "repro.analysis",
+    "PlanReport": "repro.analysis",
+    "PlanVerificationError": "repro.analysis",
     # serving (repro.serve)
     "PlanService": "repro.serve.serve_step",
 }

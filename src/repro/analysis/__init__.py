@@ -1,0 +1,47 @@
+"""Static plan verification: loop-nest legality as a checkable property.
+
+The paper's invariants (storage-prefix rule, strictly-descending fused
+chains, zero-on-pads stackability, tile divisibility, slice-mode kind,
+dtype promotion, mesh shape) re-derived symbolically into one pass —
+:func:`verify_plan` — that every engine, the autotuner, the serving
+tier, and CI consult *before* any kernel is built.  The engines' own
+guards (``fusible_chains``, ``stackable_plan``, ``_check_block_grid``,
+the slice validators) are thin wrappers over
+:mod:`repro.analysis.invariants`, so routing and verification can never
+disagree.
+"""
+from repro.analysis.diagnostics import (DIAGNOSTIC_CODES, Diagnostic,
+                                        PlanReport, PlanVerificationError,
+                                        diag)
+from repro.analysis.invariants import (BACKENDS, chain_diagnostics,
+                                       check_backend, check_block,
+                                       check_block_grid, check_mesh,
+                                       check_order, check_path_output,
+                                       check_slice, dtype_diagnostics,
+                                       fusible_chains, plan_layout_walk,
+                                       stackable_diagnostics,
+                                       vmem_diagnostics)
+from repro.analysis.verify import verify_plan
+
+__all__ = [
+    "BACKENDS",
+    "DIAGNOSTIC_CODES",
+    "Diagnostic",
+    "PlanReport",
+    "PlanVerificationError",
+    "chain_diagnostics",
+    "check_backend",
+    "check_block",
+    "check_block_grid",
+    "check_mesh",
+    "check_order",
+    "check_path_output",
+    "check_slice",
+    "diag",
+    "dtype_diagnostics",
+    "fusible_chains",
+    "plan_layout_walk",
+    "stackable_diagnostics",
+    "verify_plan",
+    "vmem_diagnostics",
+]

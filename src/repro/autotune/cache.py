@@ -36,7 +36,7 @@ import json
 import math
 import os
 import tempfile
-from typing import Mapping
+from collections.abc import Mapping
 
 from repro.core.spec import SpTTNSpec
 

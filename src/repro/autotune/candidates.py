@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Mapping, Sequence
+from collections.abc import Mapping, Sequence
 
 from repro.core import cost as cost_lib
 from repro.core.cost import ConstrainedBlas, TreeCost, path_flops

@@ -3,7 +3,8 @@ autotuning').
 
 Each candidate is compiled through its backend's engine (``make_executor``;
 XLA or generated Pallas) + jax.jit, warmed up (absorbing compile time),
-then timed ``repeats`` times; the score is the median.  Early-exit pruning: once any candidate has finished, a
+then timed ``repeats`` times; the score is the median.  Early-exit
+pruning: once any candidate has finished, a
 later candidate whose *first* timed call already exceeds
 ``prune_ratio x best_median`` is abandoned — the paper's kernels make the
 model ranking good enough that most losers die after one call.
@@ -12,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Mapping, Sequence
+from collections.abc import Mapping, Sequence
 
 import numpy as np
 

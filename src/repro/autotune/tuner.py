@@ -14,11 +14,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Mapping
+from collections.abc import Mapping
 
 from repro.autotune.cache import (PlanCache, bucket_nnz_levels,
                                   bucketed_cache_key, cache_key, device_kind)
-from repro.autotune.candidates import (Candidate, default_nnz_levels,
+from repro.autotune.candidates import (default_nnz_levels,
                                        generate_candidates)
 from repro.autotune.measure import (MeasureConfig, measure_candidates,
                                     synth_factors, synth_inputs)
@@ -107,6 +107,8 @@ class SearchStats:
     candidates_timed: int = 0
     executions: int = 0
     pruned: int = 0
+    vetoed: int = 0               # rejected by verify_plan pre-measurement
+                                  # (E-severity diagnostics; DESIGN.md §11)
     search_seconds: float = 0.0
     best_seconds: float | None = None
     model_seconds: float | None = None   # measured time of the model's pick
@@ -227,8 +229,24 @@ def tune(spec: SpTTNSpec,
         max_candidates=config.max_candidates,
         orders_per_path=config.orders_per_path,
         backends=backends, blocks=config.blocks)
-    model_cand = candidates[0]
     stats.candidates_generated = len(candidates)
+
+    # --- static verification gate ------------------------------------- #
+    # an E-severity diagnostic means some engine would reject (or
+    # miscompute) the schedule — never spend compile+measure time on it.
+    # Today's generator emits only legal candidates, so this prunes
+    # nothing; it is the contract future candidate sources inherit.
+    from repro.analysis import verify_plan
+    legal = [c for c in candidates
+             if verify_plan(spec, c.path, c.order, backend=c.backend,
+                            fused=c.fused, block=c.block or None).ok]
+    stats.vetoed = len(candidates) - len(legal)
+    if not legal:
+        raise ValueError(
+            "every generated candidate was rejected by verify_plan — "
+            "the spec admits no legal schedule on the requested axes")
+    candidates = legal
+    model_cand = candidates[0]
 
     # --- empirical measurement ---------------------------------------- #
     from repro.core.executor import CSFArrays

@@ -58,10 +58,10 @@ from __future__ import annotations
 import abc
 import dataclasses
 import math
-from typing import Mapping, Sequence
+from collections.abc import Mapping, Sequence
 
-from repro.core.loopnest import (Forest, LoopNode, LoopOrder, TermLeaf,
-                                 build_forest, leaf_paths)
+from repro.core.loopnest import (Forest, LoopOrder, TermLeaf,
+                                 build_forest)
 from repro.core.paths import ContractionPath, Term, consumer_map
 
 INF = float("inf")

@@ -5,7 +5,7 @@ The size is O((n!)^2/(n·2^n) · prod |I_i|!/k_i!); use only for small kernels
 """
 from __future__ import annotations
 
-from typing import Iterator, Mapping, Sequence
+from collections.abc import Iterator, Mapping, Sequence
 
 from repro.core.cost import TreeCost
 from repro.core.loopnest import LoopOrder, enumerate_orders

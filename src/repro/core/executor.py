@@ -22,25 +22,25 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import math
 import string
-from typing import Mapping, Sequence
+from collections.abc import Mapping, Sequence
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.diagnostics import BACKENDS
 from repro.core.loopnest import LoopOrder, buffer_indices
 from repro.core.paths import ContractionPath, Term, consumer_map
 from repro.core.spec import SpTTNSpec
 from repro.sparse.csf import CSFTensor, level_segments
 
-
-# The three execution engines (DESIGN.md §3/§6).  ``backend`` is a plan
-# attribute: the autotuner measures schedules per backend and the winner's
-# backend is persisted with the plan.
-BACKENDS = ("reference", "xla", "pallas")
+# The three execution engines (DESIGN.md §3/§6) live in ``BACKENDS``,
+# owned by the static verifier (repro.analysis.invariants) and
+# re-exported here: ``backend`` is a plan attribute — the autotuner
+# measures schedules per backend and the winner's backend is persisted
+# with the plan — and verification must share the same vocabulary.
 
 
 # =========================================================================== #
@@ -100,10 +100,20 @@ def plan_to_dict(plan) -> dict:
 
 
 def plan_from_dict(doc: dict):
+    # lazy: core.executor is imported during repro.core package init,
+    # before repro.analysis.invariants can finish (it imports core
+    # submodules); only the leaf diagnostics module is safe at top level
+    from repro.analysis.invariants import (check_block, check_mesh,
+                                           check_slice)
     from repro.core.paths import Term
     from repro.core.planner import SpTTNPlan
     if doc.get("version") != PLAN_JSON_VERSION:
-        raise ValueError(f"unsupported plan version {doc.get('version')!r}")
+        # found vs expected, spelled out: version triage on a corrupt or
+        # stale cache must never be guesswork [SPTTN-E060]
+        raise ValueError(
+            f"unsupported plan version {doc.get('version')!r}: plan JSON "
+            f"v{doc.get('version')}, expected v{PLAN_JSON_VERSION}; "
+            "re-plan, never guess [SPTTN-E060]")
     sd = doc["spec"]
     spec = SpTTNSpec(
         inputs=tuple(_tensor_ref(t) for t in sd["inputs"]),
@@ -116,22 +126,25 @@ def plan_from_dict(doc: dict):
     order = tuple(tuple(a) for a in doc["order"])
     backend = doc.get("backend", "xla")
     if backend not in BACKENDS:
-        raise ValueError(f"unknown plan backend {backend!r}")
+        raise ValueError(f"unknown plan backend {backend!r}; expected one "
+                         f"of {BACKENDS} [SPTTN-E040]")
     mesh = doc.get("mesh")
-    if mesh is not None and not isinstance(mesh, dict):
-        raise ValueError(f"plan mesh must be an object or null, got {mesh!r}")
+    for d in check_mesh(mesh):
+        raise ValueError(f"{d.message} [{d.code}]")
     fused = doc.get("fused", False)
     if not isinstance(fused, bool):
         raise ValueError(f"plan fused must be a boolean, got {fused!r}")
     block = doc.get("block")
     if block is not None and (not isinstance(block, int)
-                              or isinstance(block, bool) or block < 1
-                              or block % 8):
+                              or isinstance(block, bool)):
+        raise ValueError("plan block must be a positive multiple of 8 "
+                         f"or null, got {block!r}")
+    for d in check_block(block):
         # the sweep only ever emits sublane-aligned blocks (DESIGN.md §8);
         # accepting a misaligned one here would let compiled-mode replay
         # silently round it — rejected, never coerced
         raise ValueError("plan block must be a positive multiple of 8 "
-                         f"or null, got {block!r}")
+                         f"or null, got {block!r} [{d.code}]")
     smode = doc.get("slice_mode")
     schunks = doc.get("slice_chunks", 1)
     if smode is not None and not isinstance(smode, str):
@@ -141,24 +154,11 @@ def plan_from_dict(doc: dict):
             or schunks < 1):
         raise ValueError(f"plan slice_chunks must be a positive int, "
                          f"got {schunks!r}")
-    if smode is None:
-        if schunks != 1:
-            raise ValueError("plan slice_chunks must be 1 when slice_mode "
-                             f"is null, got {schunks!r}")
-    else:
-        # the decision is only ever stamped for a real split of a dense
-        # mode (DESIGN.md §10); anything else is a foreign/corrupt doc —
-        # rejected, never coerced
-        if smode not in spec.dims:
-            raise ValueError(f"plan slice_mode {smode!r} not in spec dims")
-        if smode in spec.sparse_indices:
-            raise ValueError(f"plan slice_mode {smode!r} is a sparse "
-                             "index; only dense modes are sliceable")
-        if schunks < 2 or schunks > spec.dims[smode]:
-            raise ValueError(
-                f"plan slice_chunks must be in [2, dims[{smode}]="
-                f"{spec.dims[smode]}] when slice_mode is set, "
-                f"got {schunks!r}")
+    # the decision is only ever stamped for a real split of a dense mode
+    # (DESIGN.md §10); anything else is a foreign/corrupt doc — rejected
+    # by the verifier's slice-kind invariants, never coerced
+    for d in check_slice(spec, smode, schunks):
+        raise ValueError(f"plan {d.message} [{d.code}]")
     return SpTTNPlan(spec=spec, path=path, order=order, cost=doc["cost"],
                      flops=doc["flops"], depth=doc["depth"], backend=backend,
                      mesh=mesh, fused=fused, block=block,
@@ -399,9 +399,6 @@ class VectorizedExecutor:
         if not sp_axes:
             return arr, inds
         take = arr
-        # gather axes one at a time, moving each gathered axis to the front
-        # and collapsing them into the fiber dimension
-        idx = None
         dense_inds = tuple(i for i in inds if i not in self.spos)
         # build advanced-index tuple
         index_tuple = []
@@ -706,10 +703,17 @@ ENGINE_KWARGS = ("block", "strategy", "tile_align")
 def _check_engine_kwargs(kwargs: Mapping, backend: str, who: str) -> None:
     unknown = sorted(k for k in kwargs if k not in ENGINE_KWARGS)
     if unknown:
+        import difflib
+        hints = []
+        for k in unknown:
+            close = difflib.get_close_matches(k, ENGINE_KWARGS, n=1)
+            if close:
+                hints.append(f"{k!r} -> did you mean {close[0]!r}?")
+        hint = ("; " + "; ".join(hints)) if hints else ""
         raise ValueError(
             f"{who}() got unknown argument(s) {unknown}; valid engine "
             f"options are {sorted(ENGINE_KWARGS)} (plus 'interpret' and "
-            f"'backend')")
+            f"'backend'){hint}")
     if kwargs and backend != "pallas":
         raise ValueError(
             f"{who}() argument(s) {sorted(kwargs)} apply only to the "
@@ -803,6 +807,12 @@ def execute_plan(plan, csf, factors: Mapping, backend: str | None = None,
     _check_engine_kwargs({k: v for k, v in kwargs.items()
                           if k != "interpret"},
                          backend or plan.backend, "execute_plan")
+    # static pre-flight: every invariant an engine would trip over deep
+    # inside a lowering is rejected here, before anything compiles, with
+    # a structured SPTTN-E* diagnostic (DESIGN.md §11)
+    from repro.analysis import verify_plan
+    verify_plan(plan, backend=backend or plan.backend).raise_if_error(
+        "execute_plan")
     if isinstance(csf, (list, tuple)):
         if plan.spec.output_is_sparse:
             raise ValueError(

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Iterator, Sequence
+from collections.abc import Iterator, Sequence
 
 from repro.core.paths import ContractionPath, Term, consumer_map
 

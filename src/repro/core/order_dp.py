@@ -35,7 +35,7 @@ True
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Sequence
+from collections.abc import Mapping, Sequence
 
 from repro.core.cost import INF, PhiCtx, TreeCost
 from repro.core.loopnest import LoopOrder

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import itertools
 import math
-from typing import Iterator, Sequence
+from collections.abc import Iterator, Sequence
 
 from repro.core.loopnest import (Forest, LoopNode, LoopOrder, TermLeaf,
                                  common_ancestor_indices, leaf_vertex_paths)

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Iterator, Sequence
+from collections.abc import Iterator, Sequence
 
 from repro.core.spec import SpTTNSpec, TensorRef
 

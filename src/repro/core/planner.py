@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Mapping, Sequence
+from collections.abc import Mapping, Sequence
 
 from repro.core import cost as cost_lib
 from repro.core.cost import ConstrainedBlas, TreeCost, path_flops

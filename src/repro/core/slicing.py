@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Mapping
+from collections.abc import Mapping
 
 import numpy as np
 
@@ -304,12 +304,11 @@ def sliced_execute(plan, csf, factors: Mapping, backend: str | None = None,
     if mode is None or chunks <= 1:
         raise ValueError("sliced_execute needs a sliced plan: slice_mode "
                          "is None / slice_chunks <= 1 (use execute_plan)")
-    if mode in set(spec.sparse_indices):
-        raise ValueError(
-            f"slice mode {mode!r} is a sparse index; slicing sparse modes "
-            "is nonzero sharding — pass a shard list to execute_plan")
-    if mode not in spec.dims:
-        raise ValueError(f"slice mode {mode!r} not in spec dims")
+    # slice-mode kind legality lives in the verifier (SPTTN-E030/E031);
+    # chunk range is checked below against the actual chunking math
+    from repro.analysis.invariants import check_slice
+    for d in check_slice(spec, mode, None):
+        raise ValueError(f"{d.message} [{d.code}]")
 
     D = spec.dims[mode]
     width = _chunk_width(D, max(1, min(chunks, D)))

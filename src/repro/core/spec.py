@@ -10,7 +10,7 @@ Indices are single characters.  Dimension sizes are supplied separately.
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Sequence
+from collections.abc import Mapping, Sequence
 
 
 @dataclasses.dataclass(frozen=True)

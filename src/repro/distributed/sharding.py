@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Mapping, Sequence
+from collections.abc import Mapping, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

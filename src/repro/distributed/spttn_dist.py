@@ -42,18 +42,19 @@ from __future__ import annotations
 
 import dataclasses
 import types
-from typing import Mapping
+from collections.abc import Mapping
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.analysis.invariants import plan_layout_walk as _plan_layout_walk
 from repro.core.executor import CSFArrays, VectorizedExecutor
 from repro.core.planner import SpTTNPlan
 from repro.core.spec import SpTTNSpec
-from repro.sparse.coo import COOTensor, _sorted
+from repro.sparse.coo import COOTensor
 from repro.sparse.csf import build_csf, level_segments
 
 
@@ -340,80 +341,10 @@ def make_distributed(spec: SpTTNSpec, plan: SpTTNPlan, coo: COOTensor,
 # =========================================================================== #
 # Stacked-layout Pallas engine: one generated-kernel trace for all shards
 # =========================================================================== #
-def _plan_layout_walk(spec: SpTTNSpec, path, chains, row_for):
-    """Mirror the executor dispatch host-side: walk the plan tracking
-    which intermediates are FiberVals and at what CSF level, verify the
-    stacked zero-nnz padding stays inert, and collect the block-layout
-    requests the Pallas lowering will ask for at trace time.
-
-    Returns ``(stackable, requests)``.  ``stackable`` is False when some
-    sparse-structured stage has no operand that is provably zero on pad
-    fibers at the stage's own level — e.g. a broadcast-down lift
-    (``v.level < lvl``) would gather REAL ancestor rows onto pad fibers
-    and pollute the result.  ``requests`` holds ``("stage", lvl,
-    out_lvl)`` for row-lowered reductions and ``("chain", lvl0, levels)``
-    for fused chains (segsum/product stages need no precomputed layout).
-    ``row_for(lvl, out_lvl)`` is the executor's strategy choice;
-    ``chains`` its detected fused chains (empty when not fused).
-    """
-    spos = {i: k for k, i in enumerate(spec.sparse_indices)}
-
-    def slv(inds):
-        return max((spos[i] + 1 for i in inds if i in spos), default=0)
-
-    def is_prefix(inds):
-        sp = sorted(spos[i] for i in inds if i in spos)
-        return sp == list(range(len(sp)))
-
-    # name -> CSF level for every FiberVal intermediate; all tracked
-    # entries are zero-on-pads by induction (a stage with a same-level
-    # zero operand multiplies pads to zero, and the sorted pad-segment
-    # tails reduce those zeros into the final row)
-    fib_lvl = {spec.sparse_input.name: len(spec.sparse_indices)}
-    requests: list[tuple] = []
-    ok = True
-    tid, n = 0, len(path)
-    while tid < n:
-        chain = chains.get(tid)
-        if chain and len(chain) > 1:
-            terms = [path[k] for k in chain]
-            first = terms[0]
-            lvl0 = slv(first.indices)
-            levels = tuple(slv(t.out.indices) for t in terms)
-            if not any(fib_lvl.get(o.name) == lvl0
-                       for o in (first.lhs, first.rhs)):
-                ok = False
-            requests.append(("chain", lvl0, levels))
-            last = terms[-1]
-            if last.out.name != "OUT" and levels[-1] > 0:
-                fib_lvl[last.out.name] = levels[-1]
-            tid += len(chain)
-            continue
-        term = path[tid]
-        tid += 1
-        term_sp = any(i in spos for i in term.indices)
-        lvl, out_lvl = slv(term.indices), slv(term.out.indices)
-        fibs = [o.name for o in (term.lhs, term.rhs) if o.name in fib_lvl]
-        prefix_ok = is_prefix(term.indices) and is_prefix(term.out.indices)
-        is_final = term.out.name == "OUT"
-        if term_sp and fibs and (prefix_ok
-                                 or (is_final and is_prefix(term.indices))):
-            # fiber path / final scatter: needs one same-level zero operand
-            if not any(fib_lvl[nm] == lvl for nm in fibs):
-                ok = False
-            if prefix_ok:
-                if out_lvl < lvl and row_for(lvl, out_lvl):
-                    requests.append(("stage", lvl, out_lvl))
-                if not is_final and out_lvl > 0:
-                    fib_lvl[term.out.name] = out_lvl
-            # the final-scatter product stage and segsum reductions use
-            # no precomputed layout (coords/segs come straight from the
-            # stacked CSF arrays)
-        # else: dense fallback — densifying a tracked FiberVal scatters
-        # zeros for pad fibers (zero-on-pads by induction), so it's safe
-    return ok, requests
-
-
+# The zero-on-pads induction walk is a static invariant, owned by the
+# verifier (repro.analysis.invariants.plan_layout_walk, imported above
+# as ``_plan_layout_walk``): the stacked lowering consumes the walk's
+# layout *requests*, the verifier its stackability verdict.
 def stackable_plan(spec: SpTTNSpec, path, fused: bool = False) -> bool:
     """True when a plan can run through the stacked Pallas engine.
 
@@ -424,13 +355,14 @@ def stackable_plan(spec: SpTTNSpec, path, fused: bool = False) -> bool:
     everywhere and the zero-nnz tails of the stacked layout contribute
     nothing on any shard — including entirely empty shard slots.  Dense
     outputs only; :func:`make_distributed_tuned` falls back to replay
-    when this returns False."""
-    if spec.output_is_sparse:
-        return False
-    from repro.kernels.codegen.executor import fusible_chains
-    chains = fusible_chains(spec, path) if fused else {}
-    ok, _ = _plan_layout_walk(spec, path, chains, lambda lvl, out_lvl: False)
-    return ok
+    when this returns False.
+
+    Thin wrapper over
+    :func:`repro.analysis.invariants.stackable_diagnostics` — the
+    verifier's E051/E052 diagnostics ARE this predicate, so engine
+    routing and static verification cannot disagree."""
+    from repro.analysis.invariants import stackable_diagnostics
+    return not stackable_diagnostics(spec, path, fused=fused)
 
 
 def _stacked_layout_tables(part: MeshPartition, ex, requests):
@@ -585,7 +517,8 @@ def make_distributed_pallas(spec: SpTTNSpec, plan: SpTTNPlan,
             "plan is not stackable: some sparse-structured stage has no "
             "operand that is zero on padded fibers at its own CSF level, "
             "so the stacked zero-nnz tails would pollute the result — "
-            "check stackable_plan() first and fall back to replay")
+            "check stackable_plan() first and fall back to replay "
+            "[SPTTN-E051]")
     extra, manifest = _stacked_layout_tables(part, ex, requests)
 
     nfib_static = dict(part.max_nfib)
@@ -840,6 +773,14 @@ def make_distributed_tuned(spec: SpTTNSpec, coo: COOTensor, mesh: Mesh,
                                  shards=shards, mode="replay", cyclic=cyclic)
     if not live:
         return dist              # degenerate: empty tensor, zero output
+
+    # static pre-flight on every live shard's winner: a corrupt cache
+    # entry (doctored mesh context, illegal axes) fails here with a
+    # structured diagnostic instead of deep inside a shard's lowering
+    from repro.analysis import verify_plan
+    for sh in live:
+        verify_plan(sh.plan).raise_if_error(
+            f"make_distributed_tuned[shard {sh.index}]")
 
     first = live[0].plan
     homogeneous = all(

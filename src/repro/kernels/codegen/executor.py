@@ -32,10 +32,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+# Chain legality is a static invariant owned by the verifier; this
+# module is where the chains are *lowered*, so it re-exports the
+# detector — the tuner and the distributed engine import it from either
+# place and get the same single implementation.
+from repro.analysis.invariants import fusible_chains  # noqa: F401
 from repro.core.executor import (CSFArrays, VectorizedExecutor,
                                  default_interpret)
 from repro.core.loopnest import LoopOrder
-from repro.core.paths import ContractionPath, consumer_map
+from repro.core.paths import ContractionPath
 from repro.core.spec import SpTTNSpec
 from repro.kernels.codegen.stages import (TILE_SUBLANE, ChainLink,
                                           Stage, StageOperand,
@@ -45,62 +50,6 @@ from repro.kernels.codegen.stages import (TILE_SUBLANE, ChainLink,
 from repro.kernels.util import padded_segment_layout, round_up
 
 DEFAULT_BLOCK = 128
-
-
-def fusible_chains(spec: SpTTNSpec,
-                   path: ContractionPath) -> dict[int, tuple[int, ...]]:
-    """Detect chains of reducing terms the fused-chain lowering can prove
-    safe (DESIGN.md §6): maximal runs of *consecutive* path terms where
-    each term's output is consumed by exactly the next term, every term
-    reduces along the sparse operand's CSF path (storage-prefix indices,
-    strictly decreasing output level, the consumer contracting at exactly
-    the intermediate's level), and each non-first term's other operand is
-    an original dense input (liftable onto that level's fibers without
-    further recursion).  Returns ``{start_tid: (tid, ...)}`` for chains of
-    length >= 2; everything else stays on the staged per-term path.
-
-    Structural only — no CSF needed — so the autotuner can use it to
-    decide whether ``fused`` is a meaningful candidate axis for a
-    schedule before any operand exists.
-    """
-    spos = {s: i for i, s in enumerate(spec.sparse_indices)}
-    dense_inputs = {t.name for t in spec.inputs if not t.is_sparse}
-
-    def slv(inds) -> int:
-        return max((spos[i] + 1 for i in inds if i in spos), default=0)
-
-    def prefix(inds) -> bool:
-        sp = sorted(spos[i] for i in inds if i in spos)
-        return sp == list(range(len(sp)))
-
-    def reducing(term) -> bool:
-        return (any(i in spos for i in term.indices)
-                and prefix(term.indices) and prefix(term.out.indices)
-                and slv(term.out.indices) < slv(term.indices))
-
-    cons = consumer_map(path)
-    chains: dict[int, tuple[int, ...]] = {}
-    used: set[int] = set()
-    for t in range(len(path)):
-        if t in used or not reducing(path[t]):
-            continue
-        tids = [t]
-        k = t
-        while k + 1 < len(path) and cons.get(k) == k + 1:
-            nxt = path[k + 1]
-            inter = path[k].out.name
-            other = (nxt.rhs if nxt.lhs.name == inter
-                     else nxt.lhs if nxt.rhs.name == inter else None)
-            if (other is None or other.name not in dense_inputs
-                    or not reducing(nxt)
-                    or slv(nxt.indices) != slv(path[k].out.indices)):
-                break
-            tids.append(k + 1)
-            k += 1
-        if len(tids) > 1:
-            chains[t] = tuple(tids)
-            used.update(tids)
-    return chains
 
 
 @dataclasses.dataclass(frozen=True)

@@ -164,11 +164,12 @@ def _check_block_grid(padded_len: int, block: int) -> None:
     non-multiple length would silently drop the tail slots, so fail
     loudly instead (layout producers — ``padded_segment_layout``,
     ``pad_segment_layout``, the stacked distributed padding — all
-    guarantee block multiples)."""
-    if padded_len % block:
-        raise ValueError(
-            f"padded operand length {padded_len} is not a multiple of "
-            f"the stage block {block}")
+    guarantee block multiples).  Thin wrapper over the verifier's
+    :func:`repro.analysis.invariants.check_block_grid` (SPTTN-E022)."""
+    from repro.analysis.invariants import check_block_grid
+    d = check_block_grid(padded_len, block)
+    if d is not None:
+        raise ValueError(f"{d.message} [{d.code}]")
 
 
 def _load_operands(stage: Stage, in_refs, mask_ref):
@@ -384,10 +385,10 @@ def run_fused_chain_stage(stage: Stage, links: tuple[ChainLink, ...],
                        for a, op in zip(link_arrays, link_ops_flat)]
 
     def kernel(*refs):
-        segs = refs[:C]
+        # refs[:C] are the segment refs; index maps consume them, the
+        # kernel body never reads them directly
         firsts = refs[C:2 * C]
         lasts = refs[2 * C:nsc]
-        del segs                 # index maps consume them; kernel does not
         off = nsc if tile else nsc + 1
         m_ref = None if tile else refs[nsc]
         in_refs = refs[off:off + n_stage]

@@ -9,7 +9,6 @@ dry-run; the Pallas path is the TPU target, validated via interpret=True).
 from __future__ import annotations
 
 import functools
-from typing import Mapping
 
 import numpy as np
 

@@ -21,7 +21,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import argparse
 import dataclasses
 import json
-import sys
 import time
 
 import jax

@@ -19,9 +19,7 @@ bytes found inside scan bodies are multiplied by the known trip count
 """
 from __future__ import annotations
 
-import math
 import re
-from typing import Mapping
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -111,7 +109,6 @@ def model_flops(cfg, sc) -> float:
     n_active = active_params(cfg)
     tokens = sc.global_batch * (sc.seq_len if sc.kind != "decode" else 1)
     base = (6.0 if sc.kind == "train" else 2.0) * n_active * tokens
-    L = cfg.n_layers
     hd = cfg.hd
     S = sc.seq_len
     B = sc.global_batch

@@ -5,6 +5,7 @@ from __future__ import annotations
 import argparse
 
 import numpy as np
+
 import jax
 
 from repro.configs import get_config, get_reduced

@@ -6,9 +6,8 @@ maps logical names -> mesh axes per mesh/shape (MaxText-style rules).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

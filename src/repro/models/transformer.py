@@ -20,11 +20,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.distributed.sharding import replicate, shard_activation
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import recurrent as R
-from repro.distributed.sharding import replicate, shard_activation
 
 
 # --------------------------------------------------------------------------- #

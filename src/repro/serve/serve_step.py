@@ -17,7 +17,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Callable, Mapping, Sequence
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -257,6 +257,12 @@ class PlanService:
                                   memory_budget=self.memory_budget)
             kind = ("bucket" if tstats.bucket_hit
                     else "exact" if tstats.cache_hit else "cold")
+            # static pre-flight before the plan enters the serving tiers:
+            # a corrupt disk-cache entry is rejected once, here, with a
+            # structured diagnostic — the in-memory exact/bucket tiers
+            # above only ever hold plans that passed (DESIGN.md §11)
+            from repro.analysis import verify_plan
+            verify_plan(plan).raise_if_error("PlanService.plan_for")
             self._plans[key] = plan
             if bkey:
                 self._bucket_plans[bkey] = plan

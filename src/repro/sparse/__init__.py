@@ -1,4 +1,4 @@
-from repro.sparse.coo import COOTensor, random_sparse, from_dense
+from repro.sparse.coo import COOTensor, from_dense, random_sparse
 from repro.sparse.csf import CSFTensor, build_csf, build_csf_batch
 
 __all__ = ["COOTensor", "random_sparse", "from_dense", "CSFTensor",

@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Callable
+from collections.abc import Callable
 
 import numpy as np
 

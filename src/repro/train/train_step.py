@@ -73,7 +73,6 @@ def make_train_step(cfg: ModelConfig, run: RunConfig):
                 body, (jnp.zeros(()), zeros), micro)
             loss = loss / k
             grads = jax.tree.map(lambda g: g / k, grads)
-            metrics = {}
         new_params, new_opt, opt_metrics = adamw_update(
             params, grads, state.opt, run)
         m = {"loss": loss, **opt_metrics}

@@ -1,0 +1,244 @@
+"""Static plan verifier (DESIGN.md §11).
+
+Covers: (a) ``verify_plan`` accepts every planner-emitted plan for all
+four paper kernels; (b) each seeded single-axis mutation is rejected
+with its stable SPTTN-E* code; (c) the legacy legality sites —
+``fusible_chains``, ``stackable_plan``, ``_check_block_grid``,
+``sliced_execute``, ``plan_from_json`` — are thin wrappers over the
+verifier (no duplicated invariant logic); (d) ``execute_plan`` refuses
+an illegal plan pre-flight with :class:`PlanVerificationError`; (e) the
+tuner's verification gate reports ``SearchStats.vetoed``; (f) the facade
+exports; (g) the docs code table stays in sync with the registry.
+"""
+import dataclasses
+import json
+import os
+import re
+
+import numpy as np
+import pytest
+
+from repro.analysis import (DIAGNOSTIC_CODES, Diagnostic, PlanReport,
+                            PlanVerificationError, diag, verify_plan)
+from repro.analysis import invariants as inv
+from repro.core import spec as S
+from repro.core.executor import (CSFArrays, execute_plan, plan_from_json,
+                                 plan_to_json)
+from repro.core.planner import plan as make_plan
+from repro.sparse import build_csf, random_sparse
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SPECS = {
+    "mttkrp": S.mttkrp(6, 5, 4, 3),
+    "ttmc3": S.ttmc3(5, 4, 3, 3, 2),
+    "tttp3": S.tttp3(5, 4, 3, 3),
+    "tttc6": S.tttc6(3, 2),
+}
+
+
+def _inputs_for(spec, seed=0):
+    shape = tuple(spec.dims[i] for i in spec.sparse_indices)
+    csf = build_csf(random_sparse(shape, 0.3, seed=seed))
+    rng = np.random.default_rng(seed)
+    factors = {t.name: rng.standard_normal(
+                   [spec.dims[i] for i in t.indices]).astype(np.float32)
+               for t in spec.inputs if not t.is_sparse}
+    return csf, factors
+
+
+# --------------------------------------------------------------------- #
+# (a) planner plans verify clean on every paper kernel
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", sorted(SPECS))
+def test_planner_plans_verify_clean(name):
+    p = make_plan(SPECS[name])
+    rep = verify_plan(p)
+    assert rep.ok, f"{name}: planner plan rejected: {rep.codes}"
+    assert not rep.errors
+    assert rep.raise_if_error() is rep     # no-op on a legal plan
+
+
+# --------------------------------------------------------------------- #
+# (b) seeded mutations -> stable codes
+# --------------------------------------------------------------------- #
+def _mutations():
+    p = make_plan(SPECS["mttkrp"])
+    p_sp = make_plan(SPECS["tttp3"])       # same-sparsity output, no chain
+    sp0 = p.spec.sparse_indices[0]
+    return [
+        ("order-length", "SPTTN-E003",
+         lambda: verify_plan(p.spec, p.path, p.order[:-1])),
+        ("not-a-permutation", "SPTTN-E002",
+         lambda: verify_plan(p.spec, p.path,
+                             (p.order[0][:-1],) + p.order[1:])),
+        ("wrong-final-output", "SPTTN-E004",
+         lambda: verify_plan(p.spec, p.path[:-1], p.order[:-1])),
+        ("fused-without-chain", "SPTTN-E010",
+         lambda: verify_plan(p_sp, fused=True)),
+        ("block-not-positive", "SPTTN-E020",
+         lambda: verify_plan(dataclasses.replace(p, block=0))),
+        ("block-misaligned", "SPTTN-E021",
+         lambda: verify_plan(dataclasses.replace(p, block=100))),
+        ("slice-unknown-mode", "SPTTN-E030",
+         lambda: verify_plan(dataclasses.replace(
+             p, slice_mode="q", slice_chunks=2))),
+        ("slice-sparse-mode", "SPTTN-E031",
+         lambda: verify_plan(dataclasses.replace(
+             p, slice_mode=sp0, slice_chunks=2))),
+        ("slice-chunks-range", "SPTTN-E032",
+         lambda: verify_plan(dataclasses.replace(
+             p, slice_mode="a", slice_chunks=10**6))),
+        ("slice-chunks-no-mode", "SPTTN-E033",
+         lambda: verify_plan(dataclasses.replace(p, slice_chunks=4))),
+        ("unknown-backend", "SPTTN-E040",
+         lambda: verify_plan(p, backend="tpu")),
+        ("mesh-malformed", "SPTTN-E050",
+         lambda: verify_plan(dataclasses.replace(p, mesh={"mesh_shape": 3}))),
+        ("sparse-output-stacked", "SPTTN-E052",
+         lambda: verify_plan(p_sp, stacked=True)),
+    ]
+
+
+@pytest.mark.parametrize("label,code,run", _mutations(),
+                         ids=[m[0] for m in _mutations()])
+def test_mutation_rejected_with_code(label, code, run):
+    rep = run()
+    assert code in rep.codes, f"{label}: {rep.codes}"
+    assert not rep.ok
+    with pytest.raises(PlanVerificationError) as ei:
+        rep.raise_if_error("test")
+    assert code in str(ei.value)
+    assert ei.value.report is rep
+
+
+def test_storage_prefix_mutation_rejected():
+    # permute the two deepest sparse levels of whichever term carries them
+    p = make_plan(SPECS["mttkrp"])
+    sparse = set(p.spec.sparse_indices)
+    mutated = None
+    for i, a in enumerate(p.order):
+        sp = [x for x in a if x in sparse]
+        if len(sp) >= 2:
+            b = list(a)
+            u, v = b.index(sp[0]), b.index(sp[1])
+            b[u], b[v] = b[v], b[u]
+            mutated = p.order[:i] + (tuple(b),) + p.order[i + 1:]
+            break
+    assert mutated is not None
+    rep = verify_plan(p.spec, p.path, mutated)
+    assert "SPTTN-E001" in rep.codes
+
+
+# --------------------------------------------------------------------- #
+# (c) legacy sites are wrappers — the invariant logic lives once
+# --------------------------------------------------------------------- #
+def test_codegen_chain_detector_is_the_verifiers():
+    from repro.kernels.codegen import executor as codegen
+    assert codegen.fusible_chains is inv.fusible_chains
+
+
+@pytest.mark.parametrize("name,expect", [("mttkrp", True), ("tttp3", False)])
+def test_stackable_plan_agrees_with_diagnostics(name, expect):
+    from repro.distributed.spttn_dist import stackable_plan
+    p = make_plan(SPECS[name])
+    assert stackable_plan(p.spec, p.path) is expect
+    diags = inv.stackable_diagnostics(p.spec, p.path)
+    assert (not diags) is expect
+    if not expect:
+        assert diags[0].code == "SPTTN-E052"
+
+
+def test_block_grid_wrapper_raises_with_code():
+    from repro.kernels.codegen.stages import _check_block_grid
+    with pytest.raises(ValueError, match=r"SPTTN-E022"):
+        _check_block_grid(130, 128)
+    _check_block_grid(256, 128)            # divisible: silent
+
+
+def test_sliced_execute_refuses_sparse_mode_with_code():
+    from repro.core.slicing import sliced_execute
+    p = make_plan(SPECS["mttkrp"])
+    csf, factors = _inputs_for(p.spec)
+    bad = dataclasses.replace(p, slice_mode=p.spec.sparse_indices[0],
+                              slice_chunks=2)
+    with pytest.raises(ValueError, match=r"SPTTN-E031"):
+        sliced_execute(bad, csf, factors)
+
+
+@pytest.mark.parametrize("patch,code", [
+    ({"version": 5}, "SPTTN-E060"),
+    ({"backend": "tpu"}, "SPTTN-E040"),
+    ({"block": 100}, "SPTTN-E021"),
+    ({"mesh": {"mesh_shape": 3}}, "SPTTN-E050"),
+])
+def test_plan_json_load_rejects_with_code(patch, code):
+    p = make_plan(SPECS["mttkrp"])
+    doc = json.loads(plan_to_json(p))
+    doc.update(patch)
+    with pytest.raises(ValueError, match=code):
+        plan_from_json(json.dumps(doc))
+
+
+# --------------------------------------------------------------------- #
+# (d) execute_plan pre-flight
+# --------------------------------------------------------------------- #
+def test_execute_plan_preflight_rejects_doctored_plan():
+    p = make_plan(SPECS["tttp3"])
+    csf, factors = _inputs_for(p.spec)
+    bad = dataclasses.replace(p, fused=True)   # no chain on tttp3
+    with pytest.raises(PlanVerificationError, match=r"SPTTN-E010"):
+        execute_plan(bad, CSFArrays.from_csf(csf), factors)
+
+
+# --------------------------------------------------------------------- #
+# (e) tuner verification gate
+# --------------------------------------------------------------------- #
+def test_tune_reports_vetoed_stat():
+    from repro.autotune import TunerConfig, tune
+    spec = S.mttkrp(16, 12, 8, 4)
+    csf, factors = _inputs_for(spec, seed=3)
+    cfg = TunerConfig(max_paths=2, max_candidates=2, orders_per_path=1,
+                      warmup=0, repeats=1)
+    tuned, stats = tune(spec, csf=csf, factors=factors, tuner=cfg)
+    assert stats.vetoed == 0               # generator emits only legal plans
+    assert stats.candidates_generated >= 1
+    assert verify_plan(tuned).ok
+
+
+# --------------------------------------------------------------------- #
+# (f) facade + diagnostics plumbing
+# --------------------------------------------------------------------- #
+def test_facade_exports_verifier():
+    import repro
+    from repro.analysis import verify as V
+    assert repro.verify_plan is V.verify_plan
+    assert repro.Diagnostic is Diagnostic
+    assert repro.PlanReport is PlanReport
+    assert repro.PlanVerificationError is PlanVerificationError
+
+
+def test_diagnostic_codes_are_registered_and_typed():
+    with pytest.raises(ValueError, match="unregistered"):
+        Diagnostic(code="SPTTN-E999", severity="error",
+                   stage_ref="x", message="m")
+    d = diag("SPTTN-W003", "term[0]", "big scratch", fix_hint="slice it")
+    assert d.severity == "warning"
+    assert "fix: slice it" in str(d)
+    assert diag("SPTTN-E001", "order[0]", "m").severity == "error"
+    rep = PlanReport(diagnostics=(d,))
+    assert rep.ok and bool(rep) and rep.warnings == (d,)
+
+
+# --------------------------------------------------------------------- #
+# (g) docs table <-> registry sync
+# --------------------------------------------------------------------- #
+def test_docs_code_table_matches_registry():
+    path = os.path.join(REPO, "docs", "analysis.md")
+    with open(path) as f:
+        text = f.read()
+    in_docs = set(re.findall(r"`(SPTTN-[EW]\d{3})`", text))
+    assert in_docs == set(DIAGNOSTIC_CODES), (
+        f"docs/analysis.md table out of sync: "
+        f"missing={sorted(set(DIAGNOSTIC_CODES) - in_docs)} "
+        f"stale={sorted(in_docs - set(DIAGNOSTIC_CODES))}")

@@ -1,0 +1,112 @@
+"""Hypothesis properties of the static plan verifier (DESIGN.md §11).
+
+Two properties pin the verifier to the engines from both sides:
+
+1. **Planner closure** — every plan the planner emits, across the
+   enumerated min-depth paths and valid loop orders of all four paper
+   kernels, verifies clean.  The verifier never rejects a schedule the
+   repo itself produced.
+2. **Mutation soundness** — a random single-field mutation of a legal
+   plan either (a) still verifies clean AND executes to the oracle
+   answer, or (b) is rejected with an error diagnostic.  There is no
+   third state: "verifier-accepted but the engine crashes or
+   miscomputes" is the bug class this file exists to rule out.
+
+Skipped wholesale where hypothesis is not installed (the CI full lane
+has it; minimal local envs may not).
+"""
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.analysis import verify_plan
+from repro.core import spec as S
+from repro.core.executor import CSFArrays, dense_oracle, execute_plan
+from repro.core.loopnest import enumerate_orders
+from repro.core.paths import min_depth_paths
+from repro.core.planner import plan as make_plan
+from repro.sparse import build_csf, random_sparse
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+SPECS = {
+    "mttkrp": S.mttkrp(6, 5, 4, 3),
+    "ttmc3": S.ttmc3(5, 4, 3, 3, 2),
+    "tttp3": S.tttp3(5, 4, 3, 3),
+    "tttc6": S.tttc6(3, 2),
+}
+
+
+def _inputs_for(spec, seed=0):
+    shape = tuple(spec.dims[i] for i in spec.sparse_indices)
+    csf = build_csf(random_sparse(shape, 0.3, seed=seed))
+    rng = np.random.default_rng(seed)
+    factors = {t.name: rng.standard_normal(
+                   [spec.dims[i] for i in t.indices]).astype(np.float32)
+               for t in spec.inputs if not t.is_sparse}
+    return csf, factors
+
+
+# --------------------------------------------------------------------- #
+# (1) planner closure: enumerated nests all verify clean
+# --------------------------------------------------------------------- #
+@settings(max_examples=30, deadline=None)
+@given(name=st.sampled_from(sorted(SPECS)),
+       path_i=st.integers(0, 5), order_i=st.integers(0, 5))
+def test_enumerated_nests_verify_clean(name, path_i, order_i):
+    spec = SPECS[name]
+    paths = list(itertools.islice(
+        min_depth_paths(spec, max_paths=path_i + 1, slack=1), path_i + 1))
+    path = paths[path_i % len(paths)]
+    orders = list(itertools.islice(
+        enumerate_orders(path, spec.sparse_indices), order_i + 1))
+    order = orders[order_i % len(orders)]
+    rep = verify_plan(spec, path, order)
+    assert rep.ok, f"{name}: verifier rejected an enumerated nest: " \
+                   f"{[str(d) for d in rep.errors]}"
+
+
+# --------------------------------------------------------------------- #
+# (2) mutation soundness: accepted -> executes; otherwise diagnosed
+# --------------------------------------------------------------------- #
+# one (field, value) pool per mutable plan axis; values mix legal and
+# illegal deliberately — the property holds for both
+_MUTATIONS = st.one_of(
+    st.tuples(st.just("backend"),
+              st.sampled_from(["reference", "xla", "pallas", "tpu", ""])),
+    st.tuples(st.just("fused"), st.booleans()),
+    st.tuples(st.just("block"), st.sampled_from([0, 8, 16, 24, 100, -8])),
+    st.tuples(st.just("slice_mode"),
+              st.sampled_from([None, "a", "i", "q"])),
+    st.tuples(st.just("slice_chunks"),
+              st.sampled_from([0, 1, 2, 3, 10**6])),
+    st.tuples(st.just("mesh"),
+              st.sampled_from([None, {"mesh_shape": 3}])),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(mutation=_MUTATIONS)
+def test_single_field_mutation_is_sound(mutation):
+    field, value = mutation
+    spec = SPECS["mttkrp"]
+    base = make_plan(spec)
+    mutated = dataclasses.replace(base, **{field: value})
+    rep = verify_plan(mutated)
+    if not rep.ok:
+        # rejected plans carry at least one error diagnostic with a
+        # stable code and a stage_ref pointing at the mutated axis
+        assert rep.errors
+        assert all(d.code.startswith("SPTTN-E") for d in rep.errors)
+        return
+    # verifier accepted: the engines must run it and agree with the
+    # oracle — anything else is the accepted-but-crashes bug class
+    csf, factors = _inputs_for(spec)
+    kwargs = {"interpret": True} if mutated.backend == "pallas" else {}
+    out = execute_plan(mutated, CSFArrays.from_csf(csf), factors, **kwargs)
+    oracle = np.asarray(dense_oracle(spec, csf, factors), dtype=np.float64)
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float64), oracle,
+                               rtol=1e-3, atol=1e-3)

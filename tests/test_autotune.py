@@ -14,7 +14,7 @@ import pytest
 
 import jax.numpy as jnp
 
-from repro.autotune import (PlanCache, SearchStats, TunerConfig, cache_key,
+from repro.autotune import (PlanCache, TunerConfig, cache_key,
                             device_kind, generate_candidates, spec_signature,
                             tune)
 from repro.core import spec as S

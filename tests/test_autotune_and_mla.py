@@ -3,7 +3,6 @@ absorbed-MLA decode equivalence (§Perf bonus cell)."""
 import itertools
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

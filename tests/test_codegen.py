@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.autotune import TunerConfig, generate_candidates, tune
 from repro.core import spec as S
-from repro.core.executor import (BACKENDS, CSFArrays, PLAN_JSON_VERSION,
+from repro.core.executor import (BACKENDS, PLAN_JSON_VERSION, CSFArrays,
                                  dense_oracle, execute_plan, make_executor,
                                  plan_from_dict, plan_from_json,
                                  plan_to_dict, plan_to_json,

@@ -23,7 +23,7 @@ from repro.core.executor import (CSFArrays, dense_oracle, execute_plan,
                                  reference_execute)
 from repro.core.planner import plan
 from repro.kernels.codegen import PallasPlanExecutor, segment_profile
-from repro.sparse import build_csf, random_sparse
+from repro.sparse import build_csf
 from repro.sparse.coo import from_coords
 from tests.conftest import run_with_devices
 
@@ -179,7 +179,9 @@ def test_distributed_replay_with_empty_shard(tmp_path):
     empty: the shard is recorded with no plan, tuning covers only live
     shards, and replay still matches the single-device reference."""
     code = f"""
-import numpy as np, jax, jax.numpy as jnp
+import numpy as np
+import jax
+import jax.numpy as jnp
 from repro.autotune import TunerConfig
 from repro.core import spec as S
 from repro.core.executor import dense_oracle

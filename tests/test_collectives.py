@@ -96,7 +96,9 @@ def test_compressed_psum_exact_on_zeros():
 @pytest.mark.slow
 def test_reduce_scatter_non_divisible_fallback():
     code = """
-import numpy as np, jax, jax.numpy as jnp
+import numpy as np
+import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.distributed.collectives import reduce_scatter_grads, shard_map
 

@@ -36,8 +36,11 @@ FAST = TunerConfig(max_paths=2, max_candidates=2, orders_per_path=1,
 # --------------------------------------------------------------------- #
 def test_distributed_replay_parity_and_per_shard_cache(tmp_path):
     code = f"""
-import json, os
-import numpy as np, jax, jax.numpy as jnp
+import json
+import os
+import numpy as np
+import jax
+import jax.numpy as jnp
 from repro.autotune import TunerConfig
 from repro.core import spec as S
 from repro.core.executor import reference_execute

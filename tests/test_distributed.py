@@ -9,7 +9,9 @@ from tests.conftest import run_with_devices
 
 def test_distributed_spttn_matches_oracle():
     code = """
-import numpy as np, jax, jax.numpy as jnp
+import numpy as np
+import jax
+import jax.numpy as jnp
 from repro.core import spec as S
 from repro.core.planner import plan
 from repro.core.executor import dense_oracle
@@ -44,7 +46,9 @@ print("SPTTN-DIST-2D-OK")
 
 def test_compressed_psum_unbiased():
     code = """
-import numpy as np, jax, jax.numpy as jnp
+import numpy as np
+import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.distributed.collectives import compressed_psum, shard_map
 
@@ -73,7 +77,9 @@ print("PSUM-OK", err_mean)
 
 def test_reduce_scatter_grads():
     code = """
-import numpy as np, jax, jax.numpy as jnp
+import numpy as np
+import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.distributed.collectives import reduce_scatter_grads, shard_map
 
@@ -104,7 +110,9 @@ def test_sharded_train_step_runs():
     """Real sharded train step on a (4,2) mesh with a reduced model:
     loss finite + params sharded as specified."""
     code = """
-import numpy as np, jax, jax.numpy as jnp
+import numpy as np
+import jax
+import jax.numpy as jnp
 from repro.configs import get_reduced, make_batch
 from repro.configs.base import RunConfig
 from repro.distributed import sharding as SH
@@ -134,7 +142,8 @@ print("SHARDED-TRAIN-OK", float(m["loss"]))
 
 def test_tree_sharding_rules():
     code = """
-import jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.distributed import sharding as SH
 

@@ -24,6 +24,7 @@ MARKDOWN_WITH_DOCTESTS = [
     "docs/cost-models.md",
     "docs/serving.md",
     "docs/out-of-core.md",
+    "docs/analysis.md",
 ]
 
 # the public API surface whose docstrings carry runnable examples

@@ -3,7 +3,6 @@ all in interpret mode (CPU container; TPU is the target)."""
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_reduced, make_batch
 from repro.configs.base import RunConfig
-from repro.models import (decode_step, forward, init_cache, loss_fn,
+from repro.models import (decode_step, forward, loss_fn,
                           model_init, prefill)
 from repro.models.transformer import _encode
 from repro.train.train_step import init_train_state, make_train_step

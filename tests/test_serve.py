@@ -8,7 +8,6 @@ serving regressions must run everywhere tier-1 runs.
 import importlib.util
 import json
 import os
-import tempfile
 import threading
 
 import numpy as np
@@ -189,7 +188,6 @@ def test_budgeted_service_slices_dispatch(tmp_path):
 def test_bucket_guard_forces_replan(tmp_path):
     """A bucketed entry whose cost estimate fails the tolerance must be
     ignored — the request replans instead of running a foreign nest."""
-    from repro.core.executor import CSFArrays
     from repro.sparse import build_csf
     x = np.random.default_rng(2).standard_normal((N, D)).astype(np.float32)
     svc = _service(str(tmp_path))
@@ -288,7 +286,7 @@ def test_bench_regression_new_rows_non_gating(capsys):
                              "serve|bucket-hit": 5473.5}}
     assert mod.compare(base, new, threshold=3.0) == 0
     out = capsys.readouterr().out
-    assert out.count("new row (unchecked)") == 2
+    assert out.count("NEW (non-gating)") == 2
     # ... while a genuine regression on a shared row still fails
     worse = {"mttkrp": {"uniform-3d|xla": 400.0}}
     assert mod.compare(base, worse, threshold=3.0) == 1

@@ -133,7 +133,9 @@ def test_annotate_missing_key_is_noop(tmp_path):
 @pytest.mark.slow
 def test_stacked_parity_across_meshes():
     code = """
-import numpy as np, jax, jax.numpy as jnp
+import numpy as np
+import jax
+import jax.numpy as jnp
 from repro.autotune import TunerConfig
 from repro.core import spec as S
 from repro.core.executor import reference_execute
@@ -198,7 +200,9 @@ for n in (2, 4):
 @pytest.mark.slow
 def test_one_trace_serves_all_shards():
     code = """
-import numpy as np, jax, jax.numpy as jnp
+import numpy as np
+import jax
+import jax.numpy as jnp
 import repro.kernels.codegen.stages as stages
 from repro.core import spec as S
 from repro.core.planner import plan
@@ -244,7 +248,9 @@ print("ONE-TRACE-OK")
 @pytest.mark.slow
 def test_stacked_edge_cases():
     code = """
-import numpy as np, jax, jax.numpy as jnp
+import numpy as np
+import jax
+import jax.numpy as jnp
 from repro.core import spec as S
 from repro.core.executor import dense_oracle
 from repro.core.planner import plan

@@ -25,8 +25,8 @@ import jax.numpy as jnp
 from repro.autotune import TunerConfig, generate_candidates, tune
 from repro.autotune.cache import CACHE_VERSION, PlanCache, cache_key
 from repro.core import spec as S
-from repro.core.executor import (CSFArrays, PLAN_JSON_VERSION, dense_oracle,
-                                 execute_plan, make_executor,
+from repro.core.executor import (PLAN_JSON_VERSION, CSFArrays,
+                                 dense_oracle, execute_plan,
                                  plan_from_dict, plan_to_dict,
                                  reference_execute)
 from repro.core.planner import plan

@@ -3,10 +3,8 @@ failure injection + elastic re-mesh, data pipeline determinism."""
 import os
 
 import numpy as np
-import pytest
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_reduced
 from repro.configs.base import RunConfig
