@@ -84,6 +84,15 @@ def run(scale: float = 1.0, R: int = 64, cache_dir: str | None = None):
                             block=256)
         block_fn = jax.jit(lambda f: bex(arrays, f))
         t_blk = timeit(block_fn, factors)
+        # same plan through the Mosaic-GPU-style split-K lowering
+        # (docs/backends.md): grid-parallel partials + segment combine.
+        # Interpret mode off-GPU — a lowering-shape row for the perf
+        # trajectory, not a CPU perf claim; new since BENCH_pr7.json, so
+        # the regression gate reports it non-gating on first appearance.
+        gex = make_executor(spec, pl_.path, pl_.order,
+                            backend="pallas-gpu")
+        gpu_fn = jax.jit(lambda f: gex(arrays, f))
+        t_gpu = timeit(gpu_fn, factors)
         from repro.kernels.codegen import fusible_chains
         fused_pallas_fn = None
         if fusible_chains(spec, pl_.path):
@@ -103,6 +112,8 @@ def run(scale: float = 1.0, R: int = 64, cache_dir: str | None = None):
                      round(t_pal * 1e6, 1), round(t_unf / t_pal, 2)))
         rows.append(("mttkrp", name, "spttn-planned-pallas-b256",
                      round(t_blk * 1e6, 1), round(t_unf / t_blk, 2)))
+        rows.append(("mttkrp", name, "spttn-planned-pallas-gpu",
+                     round(t_gpu * 1e6, 1), round(t_unf / t_gpu, 2)))
         if fused_pallas_fn is not None:
             rows.append(("mttkrp", name, "spttn-planned-pallas-fused",
                          round(t_fpal * 1e6, 1), round(t_unf / t_fpal, 2)))
@@ -117,6 +128,8 @@ def run(scale: float = 1.0, R: int = 64, cache_dir: str | None = None):
         assert np.allclose(a, c, atol=1e-2 * max(1.0, np.abs(a).max()))
         e = np.asarray(block_fn(factors))
         assert np.allclose(a, e, atol=1e-2 * max(1.0, np.abs(a).max()))
+        g = np.asarray(gpu_fn(factors))
+        assert np.allclose(a, g, atol=1e-2 * max(1.0, np.abs(a).max()))
         if fused_pallas_fn is not None:
             d = np.asarray(fused_pallas_fn(factors))
             assert np.allclose(a, d,

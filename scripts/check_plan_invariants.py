@@ -5,9 +5,10 @@ Two phases over the paper's kernels (mttkrp / ttmc3 / tttp3 / tttc6):
 
 * **Parity** — enumerate contraction paths and valid loop orders and
   assert ``verify_plan`` accepts each one (the planner/engines accept
-  exactly these); then execute a bounded sample on the ``xla`` and
-  ``pallas`` engines against the dense oracle, so "verifier-accepts"
-  provably implies "engine-accepts *and computes the right answer*".
+  exactly these); then execute a bounded sample on the ``xla``,
+  ``pallas``, and ``pallas-gpu`` engines against the dense oracle, so
+  "verifier-accepts" provably implies "engine-accepts *and computes
+  the right answer*" on every registered target.
 
 * **Mutation battery** — seeded illegal plans (permuted sparse levels,
   sparse slice modes, mis-blocked tiles, doctored plan JSON, malformed
@@ -86,7 +87,7 @@ def check_parity(max_paths: int, max_orders: int, exec_budget: int,
                     continue
                 if executed >= exec_budget:
                     continue
-                for backend in ("xla", "pallas"):
+                for backend in ("xla", "pallas", "pallas-gpu"):
                     try:
                         ex = make_executor(spec, path, order,
                                            backend=backend, interpret=True)
@@ -182,6 +183,27 @@ def check_battery(fails: list) -> int:
     if d is None or d.code != "SPTTN-E022":
         fails.append(f"battery/block-grid: expected SPTTN-E022, got {d}")
 
+    # backend whose stage lowering is unregistered on this host (E041):
+    # pop the gpu target from the registry, verify, restore
+    from repro.kernels.codegen import ir as codegen_ir
+    p_gpu = dataclasses.replace(p, backend="pallas-gpu")
+    saved = codegen_ir._LOWERINGS.pop("gpu")
+    try:
+        rep = verify_plan(p_gpu)
+        ran += 1
+        if "SPTTN-E041" not in rep.codes or rep.ok:
+            fails.append(f"battery/unregistered-lowering: expected "
+                         f"SPTTN-E041, got {rep.codes} (ok={rep.ok})")
+    finally:
+        codegen_ir._LOWERINGS["gpu"] = saved
+
+    # device-kind mismatch is a warning, never a block (W005)
+    rep = verify_plan(p_gpu, device_kind="tpu")
+    ran += 1
+    if "SPTTN-W005" not in rep.codes or not rep.ok:
+        fails.append(f"battery/device-kind: expected non-blocking "
+                     f"SPTTN-W005, got {rep.codes} (ok={rep.ok})")
+
     # broadcast-down lift: a doctored path whose second stage consumes a
     # level-1 FiberVal at level 2 with storage-prefix intact — no
     # same-level zero operand, so the stacked engine's zero-on-pads
@@ -264,9 +286,9 @@ def main(argv=None) -> int:
     ran = check_battery(fails)
 
     print(f"parity: {verified} nests verified, {executed} executed on "
-          f"xla+pallas vs the dense oracle")
-    print(f"battery: {ran} seeded illegal plans, each required to fail "
-          f"with its stable SPTTN-E* code")
+          f"xla+pallas+pallas-gpu vs the dense oracle")
+    print(f"battery: {ran} seeded plans, each required to produce "
+          f"its stable SPTTN-E*/W* code")
     for f in fails:
         print(f"FAIL {f}")
     print("check_plan_invariants:", "FAIL" if fails else "OK")

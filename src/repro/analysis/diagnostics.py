@@ -28,7 +28,25 @@ WARNING = "warning"
 #: The execution-engine vocabulary.  Lives here — the leaf module of the
 #: whole package graph — so both the verifier and ``core.executor``'s
 #: dispatch share one tuple without an import cycle.
-BACKENDS = ("reference", "xla", "pallas")
+BACKENDS = ("reference", "xla", "pallas", "pallas-gpu")
+
+#: The subset of :data:`BACKENDS` that lowers through the Pallas code
+#: generator and therefore shares its engine kwargs (``block``,
+#: ``strategy``, ``tile_align``), its fused/block plan axes, and its
+#: stage-lowering registry.  Dispatch sites test membership here instead
+#: of ``== "pallas"`` so a new Pallas target is one tuple entry, not a
+#: grep over the codebase.
+PALLAS_BACKENDS = ("pallas", "pallas-gpu")
+
+#: backend -> stage-lowering target in the kernels/codegen registry
+#: (``repro.kernels.codegen.ir``).  A backend listed here with no
+#: registered lowering on the current host is SPTTN-E041.
+PALLAS_TARGETS = {"pallas": "tpu", "pallas-gpu": "gpu"}
+
+#: backend -> the ``jax.default_backend()`` device kind it compiles for.
+#: Interpret mode runs anywhere (that is the CPU witness convention);
+#: compiled mode on a different device kind is SPTTN-W005.
+BACKEND_DEVICE_KINDS = {"pallas": "tpu", "pallas-gpu": "gpu"}
 
 #: code -> one-line summary.  Append-only: codes are stable identifiers
 #: (CI batteries and user scripts match on them), so a retired invariant
@@ -55,6 +73,9 @@ DIAGNOSTIC_CODES: dict[str, str] = {
     "SPTTN-E032": "slice chunk count out of range for the sliced dim",
     "SPTTN-E033": "slice chunks > 1 with no slice mode",
     "SPTTN-E040": "unknown backend",
+    "SPTTN-E041": "backend has no registered stage lowering on this host "
+                  "(plan replayed where its per-target lowering is "
+                  "unavailable)",
     "SPTTN-E050": "mesh context malformed",
     "SPTTN-E051": "plan not stackable: a sparse-structured stage has no "
                   "same-level zero-on-pads operand",
@@ -63,6 +84,8 @@ DIAGNOSTIC_CODES: dict[str, str] = {
     "SPTTN-E060": "plan JSON version mismatch (re-plan, never guess)",
     "SPTTN-W003": "estimated VMEM scratch exceeds budget estimate",
     "SPTTN-W004": "dtype promotion widens a crossing buffer",
+    "SPTTN-W005": "plan backend compiles for a different device kind than "
+                  "the current host (interpret-mode validation only)",
 }
 
 

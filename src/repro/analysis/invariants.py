@@ -16,7 +16,8 @@ from __future__ import annotations
 
 from collections.abc import Callable, Mapping, Sequence
 
-from repro.analysis.diagnostics import BACKENDS, Diagnostic, diag
+from repro.analysis.diagnostics import (BACKEND_DEVICE_KINDS, BACKENDS,
+                                        PALLAS_TARGETS, Diagnostic, diag)
 from repro.core.paths import ContractionPath, consumer_map
 from repro.core.spec import SpTTNSpec
 
@@ -206,6 +207,51 @@ def check_backend(backend) -> list[Diagnostic]:
             "SPTTN-E040", "plan.backend",
             f"unknown backend {backend!r}; expected one of {BACKENDS}")]
     return []
+
+
+def check_lowering(backend) -> list[Diagnostic]:
+    """A Pallas-family backend is executable only where its stage
+    lowering target (:data:`PALLAS_TARGETS`) is registered in the
+    kernels/codegen registry — a plan JSON replayed on a host whose
+    build lacks the target must be rejected *before* the engine is
+    constructed, not by an ``AttributeError`` three frames deep.  The
+    registry import is lazy: this module is imported by the codegen
+    executor itself, so a top-level import would cycle."""
+    target = PALLAS_TARGETS.get(backend)
+    if target is None:
+        return []
+    import repro.kernels.codegen  # registers the built-in lowerings
+    from repro.kernels.codegen.ir import lowering_targets
+    if target not in lowering_targets():
+        return [diag(
+            "SPTTN-E041", "plan.backend",
+            f"backend {backend!r} needs stage lowering target "
+            f"{target!r}, but this host registers only "
+            f"{lowering_targets()}",
+            "re-plan on this host (the tuner only emits backends it "
+            "can lower) instead of replaying the foreign plan JSON")]
+    return []
+
+
+def check_device_kind(backend, device_kind) -> list[Diagnostic]:
+    """Compiled Pallas kernels only run on the device kind their target
+    compiles for (:data:`BACKEND_DEVICE_KINDS`); anywhere else the
+    engines fall back to ``interpret=True`` validation semantics.  That
+    is legal — it is this repo's CPU witness convention — but a serving
+    deployment replaying a ``pallas-gpu`` winner on a TPU host is almost
+    certainly a routing mistake, so the mismatch is a warning
+    (SPTTN-W005), surfaced only when the caller states the host device
+    kind explicitly."""
+    want = BACKEND_DEVICE_KINDS.get(backend)
+    if want is None or device_kind is None or device_kind == want:
+        return []
+    return [diag(
+        "SPTTN-W005", "plan.backend",
+        f"backend {backend!r} compiles for device kind {want!r} but the "
+        f"host is {device_kind!r}; execution falls back to interpret-"
+        "mode validation semantics",
+        "tune on this host (the device kind is part of the cache key) "
+        "or route the plan to a matching device")]
 
 
 def check_block(block) -> list[Diagnostic]:

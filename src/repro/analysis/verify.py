@@ -14,7 +14,8 @@ from __future__ import annotations
 from collections.abc import Mapping
 
 from repro.analysis import invariants as inv
-from repro.analysis.diagnostics import Diagnostic, PlanReport
+from repro.analysis.diagnostics import (PALLAS_BACKENDS, Diagnostic,
+                                        PlanReport)
 
 _UNSET = object()
 
@@ -24,6 +25,7 @@ def verify_plan(plan_or_spec, path=None, order=None, *,
                 slice_mode=_UNSET, slice_chunks=_UNSET, mesh=_UNSET,
                 stacked: bool = False,
                 dtypes: Mapping[str, str] | None = None,
+                device_kind: str | None = None,
                 vmem_budget: int = inv.DEFAULT_VMEM_BUDGET) -> PlanReport:
     """Statically verify a loop-nest schedule against every invariant the
     engines enforce, before anything compiles or runs.
@@ -39,6 +41,10 @@ def verify_plan(plan_or_spec, path=None, order=None, *,
     ``stacked=True`` additionally requires the zero-on-pads induction of
     the stacked shard_map Pallas engine (DESIGN.md §7).  ``dtypes`` (name
     -> dtype string) enables the crossing-buffer promotion analysis.
+    ``device_kind`` (e.g. ``jax.default_backend()``) enables the
+    backend/device-kind mismatch warning (SPTTN-W005) — omitted by
+    default because interpret-mode validation off-device is this repo's
+    standing convention, not a defect.
 
     Returns a :class:`PlanReport`; ``report.ok`` is True iff no
     error-severity diagnostic fired — exactly the plans the engines
@@ -83,6 +89,8 @@ def verify_plan(plan_or_spec, path=None, order=None, *,
 
     diags: list[Diagnostic] = []
     diags += inv.check_backend(backend)
+    diags += inv.check_lowering(backend)
+    diags += inv.check_device_kind(backend, device_kind)
     diags += inv.check_path_output(spec, path)
     diags += inv.check_order(spec, path, order)
     if fused:
@@ -92,7 +100,7 @@ def verify_plan(plan_or_spec, path=None, order=None, *,
     diags += inv.check_mesh(mesh)
     if stacked:
         diags += inv.stackable_diagnostics(spec, path, fused=bool(fused))
-    if backend == "pallas":
+    if backend in PALLAS_BACKENDS:
         diags += inv.vmem_diagnostics(spec, path, block=block,
                                       budget=vmem_budget)
     diags += inv.dtype_diagnostics(spec, path, dtypes)

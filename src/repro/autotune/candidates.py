@@ -161,18 +161,19 @@ def generate_candidates(spec: SpTTNSpec,
         raise ValueError(f"unknown backends {bad}; expected from {BACKENDS}")
     # lazy import: the chain detector lives with the Pallas generator but
     # is purely structural, so it costs nothing when pallas is off-axis
+    from repro.analysis.diagnostics import PALLAS_BACKENDS
     from repro.kernels.codegen import fusible_chains
     expanded, seen_keys = [], set()
     for c in out:
         for b in backends:
-            if b == "pallas" and spec.sparse_input is None:
+            if b in PALLAS_BACKENDS and spec.sparse_input is None:
                 b = "xla"   # identical engines on an all-dense network
             variants = (False,)
-            if b == "pallas" and fusible_chains(spec, c.path):
-                # fusion axis: staged AND single-kernel chain lowering
+            if b in PALLAS_BACKENDS and fusible_chains(spec, c.path):
+                # fusion axis: staged AND fused chain lowering
                 variants = (False, True)
-            # block axis: only the Pallas engine consumes a block size
-            blks = blocks if b == "pallas" else (0,)
+            # block axis: only the Pallas engines consume a block size
+            blks = blocks if b in PALLAS_BACKENDS else (0,)
             for fz in variants:
                 for blk in blks:
                     cand = dataclasses.replace(c, backend=b, fused=fz,

@@ -17,6 +17,7 @@ from collections.abc import Mapping, Sequence
 
 import numpy as np
 
+from repro.analysis.diagnostics import PALLAS_BACKENDS
 from repro.autotune.candidates import Candidate
 from repro.core.spec import SpTTNSpec
 
@@ -93,7 +94,7 @@ def measure_candidates(spec: SpTTNSpec,
         kwargs = {}
         if getattr(cand, "fused", False):
             kwargs["strategy"] = "fused"   # single-kernel chain lowering
-        if backend == "pallas" and getattr(cand, "block", 0):
+        if backend in PALLAS_BACKENDS and getattr(cand, "block", 0):
             kwargs["block"] = cand.block   # swept block axis (DESIGN.md §8)
         ex = make_executor(spec, cand.path, cand.order, backend=backend,
                            **kwargs)

@@ -16,6 +16,7 @@ import dataclasses
 import time
 from collections.abc import Mapping
 
+from repro.analysis.diagnostics import PALLAS_BACKENDS
 from repro.autotune.cache import (PlanCache, bucket_nnz_levels,
                                   bucketed_cache_key, cache_key, device_kind)
 from repro.autotune.candidates import (default_nnz_levels,
@@ -80,12 +81,18 @@ class TunerConfig:
 
 
 def default_backends() -> tuple[str, ...]:
-    """Engine axis default: measure Pallas only where it can actually win
-    (compiled TPU kernels); everywhere else the XLA engine is the honest
-    wall-clock baseline and interpret-mode Pallas is validation-only."""
+    """Engine axis default: measure a Pallas engine only where it can
+    actually win (compiled kernels on its own device kind — ``pallas``
+    on TPU, ``pallas-gpu`` on GPU); everywhere else the XLA engine is
+    the honest wall-clock baseline and interpret-mode Pallas is
+    validation-only.  The device kind is part of the cache key, so a
+    TPU-tuned and a GPU-tuned winner never collide."""
     import jax
-    if jax.default_backend() == "tpu":
+    kind = jax.default_backend()
+    if kind == "tpu":
         return ("xla", "pallas")
+    if kind == "gpu":
+        return ("xla", "pallas-gpu")
     return ("xla",)
 
 
@@ -164,7 +171,7 @@ def tune(spec: SpTTNSpec,
     False
     >>> stats.candidates_timed >= 1
     True
-    >>> tuned.backend in ("xla", "pallas")
+    >>> tuned.backend in ("xla", "pallas", "pallas-gpu")
     True
     """
     from repro.core.planner import _resolve_tuner_alias
@@ -279,7 +286,7 @@ def tune(spec: SpTTNSpec,
                      mesh=None if config.mesh is None else dict(config.mesh),
                      fused=best.candidate.fused,
                      block=(best.candidate.block or None)
-                     if best.candidate.backend == "pallas" else None)
+                     if best.candidate.backend in PALLAS_BACKENDS else None)
 
     if cache is not None:
         meta = {

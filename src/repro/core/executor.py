@@ -15,8 +15,16 @@
 
 3. ``backend="pallas"`` — :class:`repro.kernels.codegen.PallasPlanExecutor`,
    a code generator that lowers the same plan to fused Pallas TPU kernels
-   (block-segment grids + VMEM accumulators, DESIGN.md §6).  Select an
-   engine with :func:`make_executor`; all three share one semantics.
+   (block-segment grids + VMEM accumulators, DESIGN.md §6).
+
+4. ``backend="pallas-gpu"`` — the same code generator driving the
+   Mosaic-GPU-style stage lowering (split-K over segment ranges + a
+   segment-combine pass, docs/backends.md): GPU grids guarantee no
+   sequential execution, so the TPU lowering's revisited VMEM
+   accumulator is replaced, behind the same target-neutral stage IR.
+
+Select an engine with :func:`make_executor`; all four share one
+semantics.
 """
 from __future__ import annotations
 
@@ -30,7 +38,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.analysis.diagnostics import BACKENDS
+from repro.analysis.diagnostics import (BACKENDS, PALLAS_BACKENDS,
+                                        PALLAS_TARGETS)
 from repro.core.loopnest import LoopOrder, buffer_indices
 from repro.core.paths import ContractionPath, Term, consumer_map
 from repro.core.spec import SpTTNSpec
@@ -714,10 +723,10 @@ def _check_engine_kwargs(kwargs: Mapping, backend: str, who: str) -> None:
             f"{who}() got unknown argument(s) {unknown}; valid engine "
             f"options are {sorted(ENGINE_KWARGS)} (plus 'interpret' and "
             f"'backend'){hint}")
-    if kwargs and backend != "pallas":
+    if kwargs and backend not in PALLAS_BACKENDS:
         raise ValueError(
             f"{who}() argument(s) {sorted(kwargs)} apply only to the "
-            f"pallas backend, got backend={backend!r}")
+            f"Pallas backends {PALLAS_BACKENDS}, got backend={backend!r}")
 
 
 def make_executor(spec: SpTTNSpec, path: ContractionPath, order: LoopOrder,
@@ -754,10 +763,10 @@ def make_executor(spec: SpTTNSpec, path: ContractionPath, order: LoopOrder,
     _check_engine_kwargs(kwargs, backend, "make_executor")
     if backend == "xla":
         return VectorizedExecutor(spec, path, order)
-    if backend == "pallas":
+    if backend in PALLAS_BACKENDS:
         from repro.kernels.codegen import PallasPlanExecutor
         return PallasPlanExecutor(spec, path, order, interpret=interpret,
-                                  **kwargs)
+                                  target=PALLAS_TARGETS[backend], **kwargs)
     if backend == "reference":
         return ReferenceExecutor(spec, path, order)
     raise ValueError(f"unknown backend {backend!r}; expected one of "
@@ -843,11 +852,12 @@ def execute_plan(plan, csf, factors: Mapping, backend: str | None = None,
         from repro.core.slicing import sliced_execute
         return sliced_execute(plan, csf, factors, backend=backend, **kwargs)
     resolved = backend or plan.backend
-    if resolved == "pallas" and getattr(plan, "fused", False):
-        # a fused-winner plan replays through the single-kernel chain
-        # lowering it was tuned with (DESIGN.md §6)
+    if resolved in PALLAS_BACKENDS and getattr(plan, "fused", False):
+        # a fused-winner plan replays through the chain lowering it was
+        # tuned with (DESIGN.md §6; one kernel on TPU, split-K + link
+        # combines on GPU)
         kwargs.setdefault("strategy", "fused")
-    if resolved == "pallas" and getattr(plan, "block", None):
+    if resolved in PALLAS_BACKENDS and getattr(plan, "block", None):
         # ... and with the exact fiber block size that won (DESIGN.md §8)
         kwargs.setdefault("block", plan.block)
     ex = make_executor(plan.spec, plan.path, plan.order,

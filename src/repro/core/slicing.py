@@ -36,6 +36,7 @@ from collections.abc import Mapping
 
 import numpy as np
 
+from repro.analysis.diagnostics import PALLAS_BACKENDS
 from repro.core.cost import buffer_bytes
 from repro.core.loopnest import LoopOrder
 from repro.core.paths import ContractionPath
@@ -313,7 +314,7 @@ def sliced_execute(plan, csf, factors: Mapping, backend: str | None = None,
     D = spec.dims[mode]
     width = _chunk_width(D, max(1, min(chunks, D)))
     resolved = backend or plan.backend
-    if resolved == "pallas":
+    if resolved in PALLAS_BACKENDS:
         if getattr(plan, "fused", False):
             kwargs.setdefault("strategy", "fused")
         if getattr(plan, "block", None):

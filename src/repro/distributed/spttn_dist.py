@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.analysis.diagnostics import PALLAS_BACKENDS
 from repro.analysis.invariants import plan_layout_walk as _plan_layout_walk
 from repro.core.executor import CSFArrays, VectorizedExecutor
 from repro.core.planner import SpTTNPlan
@@ -641,9 +642,11 @@ class DistributedPlanReplay:
     shard's winner agreed on one XLA schedule — execution then goes
     through the shard_map engine (:func:`make_distributed`), psum
     included; ``"collective-pallas"`` when they agreed on one *Pallas*
-    schedule whose plan passes :func:`stackable_plan` — one generated-
-    kernel trace inside shard_map (:func:`make_distributed_pallas`),
-    psum included; otherwise ``"replay"``: each shard executes its own
+    schedule whose plan passes :func:`stackable_plan` (the fused axis
+    is harmonized to the majority winner — a lowering detail timing
+    noise may split across shards, never a routing forfeit) — one
+    generated-kernel trace inside shard_map
+    (:func:`make_distributed_pallas`), psum included; otherwise ``"replay"``: each shard executes its own
     tuned plan via its compiled backend (``reference``/``xla``/
     ``pallas``) and the dense partials are summed host-side (exact,
     because shards keep global coordinates).  Calling the object always
@@ -783,10 +786,23 @@ def make_distributed_tuned(spec: SpTTNSpec, coo: COOTensor, mesh: Mesh,
             f"make_distributed_tuned[shard {sh.index}]")
 
     first = live[0].plan
+    # homogeneity on the schedule (path/order/backend).  The fused axis
+    # is deliberately NOT part of it: fused-vs-staged is a lowering
+    # detail of the same plan whose per-shard winner is decided by
+    # measured timings, so on near-tied candidates shards split on it
+    # by noise — forfeiting collective routing over that would make the
+    # routed mode nondeterministic run to run.  fusibility depends only
+    # on (spec, path), identical across shards, so harmonizing to the
+    # majority winner is always legal; everything else heterogeneous
+    # still falls back to replay.
     homogeneous = all(
-        (sh.plan.path, sh.plan.order, sh.plan.backend, sh.plan.fused)
-        == (first.path, first.order, first.backend, first.fused)
+        (sh.plan.path, sh.plan.order, sh.plan.backend)
+        == (first.path, first.order, first.backend)
         for sh in live)
+    fused_votes = sum(1 for sh in live if sh.plan.fused)
+    fused = homogeneous and fused_votes * 2 > len(live)
+    if first.fused != fused:
+        first = dataclasses.replace(first, fused=fused)
     if prefer_collective and homogeneous and first.backend == "xla":
         dist.mode = "collective"
         dist.collective = make_distributed(spec, first, coo, mesh,
@@ -797,8 +813,13 @@ def make_distributed_tuned(spec: SpTTNSpec, coo: COOTensor, mesh: Mesh,
         return dist
     if (prefer_collective and homogeneous and first.backend == "pallas"
             and stackable_plan(spec, first.path, fused=first.fused)):
-        # homogeneous Pallas winners: one kernel trace for all shards,
-        # replaying the tuned fused/block axes from the cache entries
+        # homogeneous TPU-Pallas winners: one kernel trace for all
+        # shards, replaying the tuned fused/block axes from the cache
+        # entries.  Deliberately "pallas" only, not PALLAS_BACKENDS: the
+        # stacked engine's one-trace-many-shards trick rides the TPU
+        # lowering's scalar-prefetched layouts; pallas-gpu winners take
+        # the per-shard replay below (split-K needs no stacking to be
+        # grid-parallel)
         dist.mode = "collective-pallas"
         dist.collective = make_distributed_pallas(
             spec, first, coo, mesh, dict(mode_axis), cyclic=cyclic,
@@ -810,12 +831,13 @@ def make_distributed_tuned(spec: SpTTNSpec, coo: COOTensor, mesh: Mesh,
 
     _annotate_dist_mode(cache_dir, live, "replay")
     for sh in live:
-        kw = dict(executor_kwargs) if sh.plan.backend == "pallas" else {}
-        if sh.plan.backend == "pallas" and sh.plan.fused:
-            # the shard's winner used the single-kernel chain lowering
+        pallas_kind = sh.plan.backend in PALLAS_BACKENDS
+        kw = dict(executor_kwargs) if pallas_kind else {}
+        if pallas_kind and sh.plan.fused:
+            # the shard's winner used the fused chain lowering
             # (DESIGN.md §6); replay through the same strategy
             kw.setdefault("strategy", "fused")
-        if sh.plan.backend == "pallas" and getattr(sh.plan, "block", None):
+        if pallas_kind and getattr(sh.plan, "block", None):
             # ... and with the shard's tuned fiber block size (DESIGN.md
             # §8) — shards may win at different blocks on skewed
             # partitions, so the knob is per shard, not per mesh

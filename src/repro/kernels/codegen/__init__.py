@@ -1,25 +1,36 @@
 """Pallas code generation for arbitrary SpTTN plans (DESIGN.md §6).
 
 Lowers any fused :class:`~repro.core.planner.SpTTNPlan` — contraction
-path + loop order + CSF level profile — to fused Pallas kernels.  This
-is the ``backend="pallas"`` engine behind
-:func:`repro.core.executor.make_executor`.
+path + loop order + CSF level profile — to fused Pallas kernels.  The
+executor emits target-neutral stage IR (ir.py) and a registered
+per-target lowering turns it into kernels: ``"tpu"`` (stages.py) is the
+``backend="pallas"`` engine behind
+:func:`repro.core.executor.make_executor`, ``"gpu"`` (lower_gpu.py) the
+``backend="pallas-gpu"`` engine.  See docs/backends.md.
 """
 from repro.kernels.codegen.executor import (DEFAULT_BLOCK,
                                             PallasPlanExecutor,
                                             SegmentProfile, fusible_chains,
                                             segment_profile)
-from repro.kernels.codegen.stages import (TILE_LANE, TILE_SUBLANE, ChainLink,
-                                          Stage, StageOperand,
-                                          accumulator_type, lane_pad,
+from repro.kernels.codegen.ir import (TILE_LANE, TILE_SUBLANE, ChainLink,
+                                      Lowering, Stage, StageIR,
+                                      StageOperand, accumulator_type,
+                                      get_lowering, lane_pad,
+                                      lowering_targets, register_lowering)
+from repro.kernels.codegen.lower_gpu import (MosaicGPULowering,
+                                             segment_combine,
+                                             splitk_partials)
+from repro.kernels.codegen.stages import (TPULowering,
                                           run_fused_chain_stage,
                                           run_product_stage,
                                           run_reduce_stage)
 
 __all__ = [
     "DEFAULT_BLOCK", "PallasPlanExecutor", "SegmentProfile",
-    "fusible_chains", "segment_profile", "ChainLink", "Stage",
-    "StageOperand", "TILE_LANE", "TILE_SUBLANE", "accumulator_type",
-    "lane_pad", "run_fused_chain_stage", "run_product_stage",
-    "run_reduce_stage",
+    "fusible_chains", "segment_profile", "ChainLink", "Stage", "StageIR",
+    "StageOperand", "Lowering", "TPULowering", "MosaicGPULowering",
+    "TILE_LANE", "TILE_SUBLANE", "accumulator_type", "lane_pad",
+    "get_lowering", "lowering_targets", "register_lowering",
+    "segment_combine", "splitk_partials", "run_fused_chain_stage",
+    "run_product_stage", "run_reduce_stage",
 ]

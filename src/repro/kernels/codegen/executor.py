@@ -5,7 +5,13 @@ Structural sibling of :class:`~repro.core.executor.VectorizedExecutor`
 final-output materialization are shared, so the two engines agree by
 construction everywhere except the lowering unit — ``_fiber_contract``,
 where the XLA engine's einsum + ``segment_sum`` is replaced by generated
-Pallas stages (kernels/codegen/stages.py).
+Pallas stages.  The executor emits *target-neutral* stage IR
+(kernels/codegen/ir.py) and hands it to the registered
+:class:`~repro.kernels.codegen.ir.Lowering` for its ``target``:
+``"tpu"`` (stages.py, sequential-grid VMEM accumulator — the
+``backend="pallas"`` engine) or ``"gpu"`` (lower_gpu.py, split-K +
+segment combine — the ``backend="pallas-gpu"`` engine).  The emitted IR
+is byte-identical across targets; only the lowering differs.
 
 Per reducing term the generator picks one of two lowerings from the
 static segment profile (pattern-known, so the choice is trace-time):
@@ -42,11 +48,10 @@ from repro.core.executor import (CSFArrays, VectorizedExecutor,
 from repro.core.loopnest import LoopOrder
 from repro.core.paths import ContractionPath
 from repro.core.spec import SpTTNSpec
-from repro.kernels.codegen.stages import (TILE_SUBLANE, ChainLink,
-                                          Stage, StageOperand,
-                                          run_fused_chain_stage,
-                                          run_product_stage,
-                                          run_reduce_stage)
+# importing the lowering modules registers the built-in targets
+from repro.kernels.codegen import lower_gpu, stages  # noqa: F401
+from repro.kernels.codegen.ir import (TILE_SUBLANE, ChainLink, Stage,
+                                      StageIR, StageOperand, get_lowering)
 from repro.kernels.util import padded_segment_layout, round_up
 
 DEFAULT_BLOCK = 128
@@ -93,7 +98,7 @@ class SegmentProfile:
 #   chain key ("chain", lvl0, levels, block) ->
 #       (lay, gather, mask[:, None], segs, firsts, lasts[:-1])
 # ``lay`` is consulted only for its static ``nseg`` at trace time; the
-# array slots may be jnp constants (single-device path) OR traced values
+# array slots may be numpy constants (single-device path) OR traced values
 # (the stacked distributed engine pre-populates the cache inside
 # shard_map with per-shard slices of mesh-stacked layouts, which is what
 # lets ONE kernel trace serve every shard).
@@ -189,17 +194,25 @@ class PallasPlanExecutor(VectorizedExecutor):
     interpret-mode validation stays unpadded by default, but the pass is
     value-preserving, so ``tile_align=True, interpret=True`` is the
     CPU-testable witness for the compiled lowering.
+
+    ``target`` names the registered stage lowering (docs/backends.md):
+    ``"tpu"`` — sequential-grid VMEM accumulation (``backend="pallas"``)
+    or ``"gpu"`` — split-K + segment combine (``backend="pallas-gpu"``).
+    The executor emits the same IR either way; strategy choice, layouts,
+    and operand lifting are all target-independent.
     """
 
     def __init__(self, spec: SpTTNSpec, path: ContractionPath,
                  order: LoopOrder, block: int = DEFAULT_BLOCK,
                  interpret: bool | None = None, strategy: str = "auto",
-                 tile_align: bool | None = None):
+                 tile_align: bool | None = None, target: str = "tpu"):
         super().__init__(spec, path, order)
         if strategy not in ("auto", "row", "segsum", "fused"):
             raise ValueError(f"unknown strategy {strategy!r}")
         if block < 1:
             raise ValueError(f"block must be positive, got {block}")
+        self.target = target
+        self.lowering = get_lowering(target)   # ValueError on unknown
         self.interpret = default_interpret() if interpret is None \
             else interpret
         self.tile_align = (not self.interpret) if tile_align is None \
@@ -214,6 +227,11 @@ class PallasPlanExecutor(VectorizedExecutor):
         # its latest trace instead of accumulating every one.
         self.emitted_stages: list[Stage] = []
         self.emitted_chains: list[tuple[Stage, tuple[ChainLink, ...]]] = []
+        # the full target-neutral IR, one entry per lowering-unit call —
+        # identical across targets for the same plan/operand/settings
+        # (the cross-backend tests assert it), which is what makes a
+        # TPU-vs-GPU value disagreement attributable to a lowering
+        self.emitted_ir: list[StageIR] = []
         # (lvl, out_lvl) -> "row" | "segsum" | "fused", recorded at trace
         # time for inspection (tests, distributed per-shard strategy
         # reporting).  A fused chain records ONE entry keyed by its
@@ -228,6 +246,7 @@ class PallasPlanExecutor(VectorizedExecutor):
     def __call__(self, csf, factors):
         self.emitted_stages.clear()
         self.emitted_chains.clear()
+        self.emitted_ir.clear()
         self.stage_strategy.clear()
         return super().__call__(csf, factors)
 
@@ -239,9 +258,14 @@ class PallasPlanExecutor(VectorizedExecutor):
             seg = np.asarray(csf.seg[(lvl, out_lvl)])
             nseg = csf.nfib[out_lvl] if out_lvl > 0 else 1
             lay = padded_segment_layout(seg, nseg, self.block)
+            # entries stay numpy: an entry first created INSIDE one jit
+            # trace must be reusable by a later trace over the same
+            # operand (tuner timing several pallas-family candidates), so
+            # nothing trace-bound may be cached here — each trace lifts
+            # the constants itself at the use sites
             cache[key] = stage_cache_entry(
-                lay, jnp.asarray(lay.gather), jnp.asarray(lay.mask),
-                jnp.asarray(lay.block_seg), jnp.asarray(lay.block_first))
+                lay, lay.gather, lay.mask,
+                lay.block_seg, lay.block_first)
         return cache[key]
 
     def strategy_for(self, csf: CSFArrays, lvl: int, out_lvl: int) -> str:
@@ -284,11 +308,11 @@ class PallasPlanExecutor(VectorizedExecutor):
             return cache[key]
         lay, segs, firsts, lasts = chain_block_arrays(csf, lvl0, levels,
                                                       self.block)
+        # numpy, not jnp: see _layout — cache entries outlive any single
+        # jit trace, so they must never hold trace-bound values
         entry = chain_cache_entry(
-            lay, jnp.asarray(lay.gather), jnp.asarray(lay.mask),
-            tuple(jnp.asarray(s) for s in segs),
-            tuple(jnp.asarray(f) for f in firsts),
-            tuple(jnp.asarray(l) for l in lasts[:-1]))
+            lay, lay.gather, lay.mask,
+            tuple(segs), tuple(firsts), tuple(lasts[:-1]))
         cache[key] = entry
         return entry
 
@@ -372,11 +396,14 @@ class PallasPlanExecutor(VectorizedExecutor):
         out_lvl = levels[-1]
         nseg_out = csf.nfib[out_lvl] if out_lvl > 0 else 1
         dtype = jnp.result_type(dtype, *[a.dtype for a in link_arrays])
+        nseg_lvls = tuple(csf.nfib[l] if l > 0 else 1 for l in levels)
+        ir = StageIR(kind="chain", stage=stage, links=tuple(links),
+                     nseg_out=nseg_out, nseg_lvls=nseg_lvls)
         self.emitted_stages.append(stage)
         self.emitted_chains.append((stage, tuple(links)))
-        out2d = run_fused_chain_stage(stage, tuple(links), segs, firsts,
-                                      lasts, mask, padded, link_arrays,
-                                      nseg_out, dtype)
+        self.emitted_ir.append(ir)
+        out2d = self.lowering.chain(ir, segs, firsts, lasts, mask, padded,
+                                    link_arrays, dtype)
         self.stage_strategy[(lvl0, out_lvl)] = "fused"
         arr = out2d.reshape((nseg_out,) + out_shape)
         if out_lvl == 0:
@@ -420,9 +447,11 @@ class PallasPlanExecutor(VectorizedExecutor):
                           out_shape=oshape, reduce=True, block=self.block,
                           nseg=lay.nseg, interpret=self.interpret,
                           tile=self.tile_align)
+            ir = StageIR(kind="reduce", stage=stage)
             self.emitted_stages.append(stage)
-            out2d = run_reduce_stage(stage, block_seg, block_first, mask,
-                                     padded, dtype)
+            self.emitted_ir.append(ir)
+            out2d = self.lowering.reduce(ir, block_seg, block_first, mask,
+                                        padded, dtype)
             arr = out2d.reshape((lay.nseg,) + oshape)
             return arr.reshape(oshape) if out_lvl == 0 else arr
 
@@ -440,8 +469,10 @@ class PallasPlanExecutor(VectorizedExecutor):
                       out_shape=oshape, reduce=False, block=self.block,
                       nseg=0, interpret=self.interpret,
                       tile=self.tile_align)
+        ir = StageIR(kind="product", stage=stage)
         self.emitted_stages.append(stage)
-        per_fiber = run_product_stage(stage, padded, dtype)
+        self.emitted_ir.append(ir)
+        per_fiber = self.lowering.product(ir, padded, dtype)
         arr = per_fiber[:nfib].reshape((nfib,) + oshape)
         if reduce_:
             seg = csf.seg[(lvl, out_lvl)] if out_lvl > 0 else jnp.zeros(

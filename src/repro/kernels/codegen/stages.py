@@ -1,11 +1,17 @@
-"""Pallas stage emitters — the code generator's instruction set.
+"""TPU stage lowering — the sequential-grid consumer of the stage IR.
+
+The target-neutral stage descriptions live in kernels/codegen/ir.py
+(:class:`Stage`, :class:`ChainLink`, :class:`StageIR`); this module is
+the ``"tpu"`` :class:`~repro.kernels.codegen.ir.Lowering` registered for
+them, plus the runner functions it is built from (kept as public API —
+tests and the stacked distributed engine call them directly).
 
 A fused SpTTN plan lowers to a sequence of *stages*, one per sparse
-contraction term (DESIGN.md §6).  Every stage is a scalar-prefetched
-block-segment grid over level-``lvl`` CSF fibers, generalizing the
-hand-written MTTKRP kernel's ``block_seg``/``block_first`` machinery
-(kernels/util.py) to arbitrary CSF depth and arbitrary dense index
-structure:
+contraction term (DESIGN.md §6).  On TPU every stage is a
+scalar-prefetched block-segment grid over level-``lvl`` CSF fibers,
+generalizing the hand-written MTTKRP kernel's
+``block_seg``/``block_first`` machinery (kernels/util.py) to arbitrary
+CSF depth and arbitrary dense index structure:
 
 * the per-fiber dense contraction is one in-kernel ``jnp.einsum`` —
   traced to ``dot_general`` on the MXU (the paper's BLAS offload);
@@ -26,7 +32,11 @@ structure:
 
 Stages are pure descriptions (shapes, subscripts, block size); emission
 happens at trace time, so one jit of the enclosing executor compiles the
-whole plan.
+whole plan.  All of this is correct *only because TPU grids execute
+sequentially* — the output BlockSpec revisits a segment's row across its
+blocks and the VMEM accumulator survives between grid steps.  The GPU
+lowering (kernels/codegen/lower_gpu.py) makes no such assumption and
+realizes the same IR as split-K partials plus a segment-combine pass.
 
 Tile alignment (compiled mode, DESIGN.md §8)
 --------------------------------------------
@@ -52,148 +62,21 @@ The pass changes only shapes, never values, so interpret mode with
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.util import round_up
-
-# float32 hardware tile: (sublane, lane) = (8, 128).  Wider dtypes only
-# shrink the sublane constraint, so aligning to the float32 tile is valid
-# for every dtype the stages accumulate at (>= float32).
-TILE_LANE = 128
-TILE_SUBLANE = 8
-
-
-def lane_pad(dim: int) -> int:
-    """Next multiple of :data:`TILE_LANE` at or above ``dim``."""
-    return round_up(dim, TILE_LANE)
-
-
-@dataclasses.dataclass(frozen=True)
-class StageOperand:
-    """One kernel input: ``subs`` are the dense-axis einsum letters,
-    ``shape`` the dense shape.  ``fiber`` operands carry the padded fiber
-    axis (einsum batch letter Z) and arrive as (P, prod(shape)) blocks;
-    broadcast operands arrive as one (1, prod(shape)) block shared by
-    every grid step."""
-
-    subs: str
-    shape: tuple[int, ...]
-    fiber: bool
-
-    @property
-    def flat_dim(self) -> int:
-        return math.prod(self.shape)
-
-
-def accumulator_type(dtype) -> jnp.dtype:
-    """Accumulation dtype for a stage's in-kernel einsum: at least float32
-    (MXU accumulation width), widened to match wider operands — float64
-    stages accumulate at float64, never silently at float32."""
-    return jnp.promote_types(jnp.float32, dtype)
-
-
-@dataclasses.dataclass(frozen=True)
-class Stage:
-    """A single generated kernel: ``einsum(operands) -> out_subs`` per
-    block, reduced over the fiber axis into ``nseg`` segment rows when
-    ``reduce`` is set.  ``tile`` selects the pad-to-tile lowering (lane
-    widths padded to :data:`TILE_LANE`, mask pre-folded) required for
-    ``interpret=False`` on real TPUs."""
-
-    operands: tuple[StageOperand, ...]
-    out_subs: str
-    out_shape: tuple[int, ...]
-    reduce: bool
-    block: int
-    nseg: int            # segment-row count (reduce stages only)
-    interpret: bool
-    tile: bool = False
-
-    @property
-    def out_flat_dim(self) -> int:
-        return math.prod(self.out_shape)
-
-    def op_pad(self, op: StageOperand) -> int:
-        """Lane width of ``op``'s block (padded in tile mode)."""
-        return lane_pad(op.flat_dim) if self.tile else op.flat_dim
-
-    @property
-    def out_pad(self) -> int:
-        """Lane width of the output block (padded in tile mode)."""
-        return lane_pad(self.out_flat_dim) if self.tile else self.out_flat_dim
-
-    @property
-    def expr(self) -> str:
-        ins = ",".join(("Z" + op.subs) if op.fiber else op.subs
-                       for op in self.operands)
-        return f"{ins}->{'' if self.reduce else 'Z'}{self.out_subs}"
-
-
-def _premask(stage: Stage, padded, mask: jnp.ndarray):
-    """Fold the pad-slot mask into the first fiber operand ahead of the
-    kernel (tile mode: the ``(block, 1)`` mask input has no tile-legal
-    lane width, so masking happens in XLA where a (P, 1) broadcast is
-    free).  Pad slots gather nonzero 0's values — one zero factor per
-    product is necessary and sufficient for their partials to vanish."""
-    out = list(padded)
-    for i, op in enumerate(stage.operands):
-        if op.fiber:
-            out[i] = out[i] * mask.astype(out[i].dtype)
-            break
-    return out
-
-
-def _lane_padded(arr: jnp.ndarray, width: int) -> jnp.ndarray:
-    """Zero-pad the last dim of a 2-D array up to ``width`` — used both on
-    operand arrays ahead of the kernel and on kernel partials before they
-    accumulate, so output pad lanes only ever hold zeros and the caller's
-    final column slice is exact."""
-    if arr.shape[-1] == width:
-        return arr
-    return jnp.pad(arr, ((0, 0), (0, width - arr.shape[-1])))
-
-
-def _check_block_grid(padded_len: int, block: int) -> None:
-    """The sequential grid covers ``padded_len // block`` blocks; a
-    non-multiple length would silently drop the tail slots, so fail
-    loudly instead (layout producers — ``padded_segment_layout``,
-    ``pad_segment_layout``, the stacked distributed padding — all
-    guarantee block multiples).  Thin wrapper over the verifier's
-    :func:`repro.analysis.invariants.check_block_grid` (SPTTN-E022)."""
-    from repro.analysis.invariants import check_block_grid
-    d = check_block_grid(padded_len, block)
-    if d is not None:
-        raise ValueError(f"{d.message} [{d.code}]")
-
-
-def _load_operands(stage: Stage, in_refs, mask_ref):
-    """Read each operand block and restore its dense shape; the mask is
-    folded into the first fiber operand so pad slots contribute zero.
-    Tile mode slices the padded lanes back off before the reshape, so
-    the einsum always sees exact (unpadded) operands."""
-    vals = []
-    masked = mask_ref is None
-    for ref, op in zip(in_refs, stage.operands):
-        v = ref[...]
-        if v.shape[-1] != op.flat_dim:
-            v = v[:, :op.flat_dim]
-        if op.fiber:
-            v = v.reshape((stage.block,) + op.shape)
-            if not masked:
-                m = mask_ref[...].reshape(
-                    (stage.block,) + (1,) * len(op.shape))
-                v = v * m.astype(v.dtype)
-                masked = True
-        else:
-            v = v.reshape(op.shape)
-        vals.append(v)
-    return vals
+# The IR layer moved to kernels/codegen/ir.py; the names are re-exported
+# here because this module has always been their import surface (tests,
+# the stacked distributed engine, and the executor all import from
+# ``stages``) and because the TPU runners below are their first consumer.
+from repro.kernels.codegen.ir import (TILE_LANE, TILE_SUBLANE,  # noqa: F401
+                                      ChainLink, Lowering, Stage, StageIR,
+                                      StageOperand, _check_block_grid,
+                                      _lane_padded, _load_operands,
+                                      _premask, accumulator_type, lane_pad,
+                                      register_lowering)
 
 
 def run_reduce_stage(stage: Stage, block_seg: jnp.ndarray,
@@ -310,34 +193,6 @@ def run_product_stage(stage: Stage, padded, dtype) -> jnp.ndarray:
     )(*padded)
     return out[:, :stage.out_flat_dim] if out_pad != stage.out_flat_dim \
         else out
-
-
-@dataclasses.dataclass(frozen=True)
-class ChainLink:
-    """One outer level of a fused reducing chain.
-
-    ``operands[0]`` is the inner crossing buffer (always a fiber operand:
-    one level-``lvl`` row per flush); the rest are the link term's other
-    operands — fiber operands arrive as scalar-prefetch-indexed ``(1, D)``
-    blocks (the row of the level-``lvl`` fiber whose segment just closed),
-    broadcast operands as shared ``(1, D)`` blocks.  ``expr`` reduces the
-    singleton fiber axis away, so a flush adds one ``out_shape`` partial
-    into the next level's buffer.
-    """
-
-    operands: tuple[StageOperand, ...]
-    out_subs: str
-    out_shape: tuple[int, ...]
-
-    @property
-    def out_flat_dim(self) -> int:
-        return math.prod(self.out_shape)
-
-    @property
-    def expr(self) -> str:
-        ins = ",".join(("Z" + op.subs) if op.fiber else op.subs
-                       for op in self.operands)
-        return f"{ins}->{self.out_subs}"
 
 
 def run_fused_chain_stage(stage: Stage, links: tuple[ChainLink, ...],
@@ -473,4 +328,41 @@ def run_fused_chain_stage(stage: Stage, links: tuple[ChainLink, ...],
         out_shape=jax.ShapeDtypeStruct((nseg_out, out_pad), dtype),
         interpret=stage.interpret,
     )(*seg_lvls, *first_lvls, *last_lvls, *inputs)
+    # an output row whose segment owns no block is never stored by the
+    # kernel (the revisit pattern only reaches segments present in the
+    # outermost block->segment map), so it returns whatever memory
+    # backed the buffer.  Single-device CSF layouts reach every row, but
+    # the stacked engine's shards padded to the mesh-wide maximum (and
+    # its all-padding empty shards) do not — mask those rows to the
+    # exact zero an empty segment contributes.
+    # (jnp.where, not a multiply — the garbage may be NaN/inf, which a
+    # zero multiply would propagate instead of clearing)
+    row_written = jnp.zeros((nseg_out,), jnp.int32).at[
+        jnp.asarray(seg_lvls[-1])].set(1)
+    out = jnp.where(row_written[:, None] != 0, out, jnp.zeros((), dtype))
     return out[:, :out_flat] if out_pad != out_flat else out
+
+
+class TPULowering(Lowering):
+    """The sequential-grid target: adapts :class:`StageIR` onto the
+    runner functions above.  Registered as ``"tpu"`` — the lowering
+    behind ``make_executor(backend="pallas")``."""
+
+    target = "tpu"
+
+    def reduce(self, ir: StageIR, block_seg, block_first, mask, padded,
+               dtype):
+        return run_reduce_stage(ir.stage, block_seg, block_first, mask,
+                                padded, dtype)
+
+    def product(self, ir: StageIR, padded, dtype):
+        return run_product_stage(ir.stage, padded, dtype)
+
+    def chain(self, ir: StageIR, seg_lvls, first_lvls, last_lvls, mask,
+              padded, link_arrays, dtype):
+        return run_fused_chain_stage(ir.stage, ir.links, seg_lvls,
+                                     first_lvls, last_lvls, mask, padded,
+                                     link_arrays, ir.nseg_out, dtype)
+
+
+register_lowering(TPULowering())

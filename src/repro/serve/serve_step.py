@@ -277,7 +277,8 @@ class PlanService:
         ex = self._executors.get(pkey)
         if ex is None:
             kwargs = {}
-            if plan.backend == "pallas":
+            from repro.analysis.diagnostics import PALLAS_BACKENDS
+            if plan.backend in PALLAS_BACKENDS:
                 if plan.fused:
                     kwargs["strategy"] = "fused"
                 if plan.block:

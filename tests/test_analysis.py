@@ -156,6 +156,38 @@ def test_block_grid_wrapper_raises_with_code():
     _check_block_grid(256, 128)            # divisible: silent
 
 
+# --------------------------------------------------------------------- #
+# backend portability codes (docs/backends.md)
+# --------------------------------------------------------------------- #
+def test_unregistered_lowering_rejected_with_code(monkeypatch):
+    from repro.kernels.codegen import ir
+    p = make_plan(SPECS["mttkrp"])
+    gpu = dataclasses.replace(p, backend="pallas-gpu")
+    assert verify_plan(gpu).ok             # both built-ins registered
+    monkeypatch.delitem(ir._LOWERINGS, "gpu")
+    rep = verify_plan(gpu)
+    assert "SPTTN-E041" in rep.codes
+    assert not rep.ok
+    # the TPU target is untouched — only the missing one is rejected
+    assert verify_plan(dataclasses.replace(p, backend="pallas")).ok
+    # the engine registry reports the same condition as a ValueError
+    with pytest.raises(ValueError, match="no stage lowering"):
+        ir.get_lowering("gpu")
+
+
+def test_device_kind_mismatch_warns_never_blocks():
+    p = make_plan(SPECS["mttkrp"])
+    gpu = dataclasses.replace(p, backend="pallas-gpu")
+    rep = verify_plan(gpu, device_kind="tpu")
+    assert "SPTTN-W005" in rep.codes
+    assert rep.ok                          # warnings never block
+    # matching device kind, non-Pallas backends, and the default
+    # (device kind unstated — the CPU witness convention) stay silent
+    assert "SPTTN-W005" not in verify_plan(gpu, device_kind="gpu").codes
+    assert "SPTTN-W005" not in verify_plan(p, device_kind="gpu").codes
+    assert "SPTTN-W005" not in verify_plan(gpu).codes
+
+
 def test_sliced_execute_refuses_sparse_mode_with_code():
     from repro.core.slicing import sliced_execute
     p = make_plan(SPECS["mttkrp"])

@@ -1,0 +1,217 @@
+"""Cross-backend differential test matrix (docs/backends.md).
+
+Every paper kernel x backend x reduction strategy runs against the
+Algorithm-2 reference interpreter at 1e-5 — the correctness witness for
+the target-neutral stage IR: both Pallas lowerings (TPU sequential-grid
+accumulator, Mosaic-GPU split-K + segment-combine) consume the *same*
+emitted IR, so a mismatch isolates to one target's lowering, never to
+stage construction.  The degenerate layouts from ``test_codegen_edges``
+(zero nnz, single segment, all-singleton segments) ride through the
+same matrix.  All Pallas execution is interpret-mode (CPU container).
+
+``SPTTN_TEST_BACKENDS`` (comma-separated) restricts the backend axis —
+CI's gpu-interpret step sets it to ``pallas-gpu`` to prove the new
+lowering in isolation.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.analysis.invariants import fusible_chains
+from repro.core import spec as S
+from repro.core.executor import (CSFArrays, dense_oracle, execute_plan,
+                                 make_executor, plan_from_json,
+                                 plan_to_json, reference_execute)
+from repro.core.planner import plan
+from repro.sparse import build_csf, random_sparse
+from repro.sparse.coo import from_coords
+from tests.test_codegen_edges import (_single_segment_csf,
+                                      _singleton_segment_csf)
+
+BACKENDS_UNDER_TEST = tuple(
+    b for b in os.environ.get("SPTTN_TEST_BACKENDS",
+                              "xla,pallas,pallas-gpu").split(",") if b)
+
+STRATEGIES = ("row", "segsum", "fused", "auto")
+
+# the four paper kernels of §2.3/§7, at the sizes test_codegen.py uses
+MATRIX_KERNELS = [
+    pytest.param(S.mttkrp(6, 7, 8, 4), 0.3, id="mttkrp"),
+    pytest.param(S.ttmc3(6, 7, 8, 4, 3), 0.3, id="ttmc"),
+    pytest.param(S.tttp3(6, 7, 8, 4), 0.3, id="tttp"),
+    pytest.param(S.tttc6(4, 3), 0.02, id="tttc"),
+]
+
+
+def _factors(spec, rng):
+    return {t.name: rng.standard_normal(
+        [spec.dims[i] for i in t.indices]).astype(np.float32)
+        for t in spec.inputs if not t.is_sparse}
+
+
+def _densify(spec, csf, out):
+    if not spec.output_is_sparse:
+        return np.asarray(out)
+    dense = np.zeros([spec.dims[i] for i in spec.output.indices])
+    dense[tuple(csf.coo.coords.T)] = np.asarray(out)
+    return dense
+
+
+def _engine_kwargs(backend, strategy):
+    """The (backend, strategy) cell's engine kwargs, or None to skip."""
+    if backend == "xla":
+        # xla has no strategy axis — run it once, on the 'auto' row
+        return {} if strategy == "auto" else None
+    return {"strategy": strategy, "block": 8}
+
+
+# --------------------------------------------------------------------- #
+# the matrix: paper kernels x backends x strategies vs the reference
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("backend", BACKENDS_UNDER_TEST)
+@pytest.mark.parametrize("spec,density", MATRIX_KERNELS)
+def test_matrix_matches_reference(spec, density, backend, strategy):
+    kwargs = _engine_kwargs(backend, strategy)
+    if kwargs is None:
+        pytest.skip("xla has no strategy axis")
+    shape = tuple(spec.dims[i] for i in spec.sparse_indices)
+    csf = build_csf(random_sparse(shape, density, seed=3))
+    rng = np.random.default_rng(1)
+    factors = _factors(spec, rng)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    if strategy == "fused" and backend != "xla" \
+            and not fusible_chains(spec, p.path):
+        pytest.skip("no fusible chain on this kernel's planned path")
+    ex = make_executor(spec, p.path, p.order, backend=backend,
+                       interpret=True, **kwargs)
+    out = _densify(spec, csf, ex(CSFArrays.from_csf(csf), factors))
+    ref = reference_execute(spec, p.path, p.order, csf, factors)
+    np.testing.assert_allclose(out, ref, atol=1e-5,
+                               err_msg=f"{backend}/{strategy}")
+    np.testing.assert_allclose(out, dense_oracle(spec, csf, factors),
+                               atol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# degenerate layouts from test_codegen_edges, through every cell
+# --------------------------------------------------------------------- #
+def _zero_nnz_csf():
+    return build_csf(from_coords(np.zeros((0, 3), np.int64),
+                                 np.zeros((0,), np.float32), (6, 7, 8)))
+
+
+EDGE_LAYOUTS = [
+    pytest.param(_zero_nnz_csf, id="zero-nnz"),
+    pytest.param(_single_segment_csf, id="single-segment"),
+    pytest.param(_singleton_segment_csf, id="all-singleton"),
+]
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("backend", BACKENDS_UNDER_TEST)
+@pytest.mark.parametrize("make_csf", EDGE_LAYOUTS)
+def test_edge_layouts_across_backends(make_csf, backend, strategy):
+    kwargs = _engine_kwargs(backend, strategy)
+    if kwargs is None:
+        pytest.skip("xla has no strategy axis")
+    spec = S.mttkrp(6, 7, 8, 4)
+    csf = make_csf()
+    rng = np.random.default_rng(2)
+    factors = _factors(spec, rng)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    ex = make_executor(spec, p.path, p.order, backend=backend,
+                       interpret=True, **kwargs)
+    out = np.asarray(ex(CSFArrays.from_csf(csf), factors))
+    oracle = dense_oracle(spec, csf, factors)
+    if csf.nnz == 0:
+        assert out.shape == (6, 4)
+        np.testing.assert_array_equal(out, np.zeros((6, 4), np.float32))
+    np.testing.assert_allclose(out, oracle, atol=1e-5,
+                               err_msg=f"{backend}/{strategy}")
+
+
+# --------------------------------------------------------------------- #
+# the IR invariant: both Pallas targets consume identical emitted IR
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", ["auto", "fused"])
+def test_emitted_ir_identical_across_pallas_targets(strategy):
+    """The stage IR is target-neutral by construction: the executor
+    emits the same ``StageIR`` sequence whichever lowering consumes it,
+    so a cross-target output mismatch can only live in a lowering."""
+    spec = S.mttkrp(6, 7, 8, 4)
+    csf = build_csf(random_sparse((6, 7, 8), 0.3, seed=3))
+    arrays = CSFArrays.from_csf(csf)
+    rng = np.random.default_rng(1)
+    factors = _factors(spec, rng)
+    p = plan(spec, nnz_levels=csf.nnz_levels())
+    e_tpu = make_executor(spec, p.path, p.order, backend="pallas",
+                          block=8, interpret=True, strategy=strategy)
+    e_gpu = make_executor(spec, p.path, p.order, backend="pallas-gpu",
+                          block=8, interpret=True, strategy=strategy)
+    out_t = np.asarray(e_tpu(arrays, factors))
+    out_g = np.asarray(e_gpu(arrays, factors))
+    assert e_tpu.emitted_ir, "executor recorded no stage IR"
+    assert e_tpu.emitted_ir == e_gpu.emitted_ir
+    if strategy == "fused":
+        assert any(ir.kind == "chain" for ir in e_tpu.emitted_ir)
+    np.testing.assert_allclose(out_t, out_g, atol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# acceptance: tuner persists and replays a pallas-gpu winner
+# --------------------------------------------------------------------- #
+def _mttkrp_inputs():
+    spec = S.mttkrp(16, 12, 10, 4)
+    csf = build_csf(random_sparse((16, 12, 10), 0.1, seed=3))
+    rng = np.random.default_rng(0)
+    factors = {t.name: jnp.asarray(rng.standard_normal(
+        [spec.dims[i] for i in t.indices]).astype(np.float32))
+        for t in spec.inputs if not t.is_sparse}
+    return spec, csf, factors
+
+
+def test_tuner_three_backend_axis_and_gpu_winner_round_trip(tmp_path):
+    from repro.autotune import TunerConfig, tune
+    spec, csf, factors = _mttkrp_inputs()
+    oracle = dense_oracle(spec, csf,
+                          {k: np.asarray(v) for k, v in factors.items()})
+
+    # all three backends reach the timer; the winner is one of them
+    cfg = TunerConfig(max_paths=2, max_candidates=3, orders_per_path=1,
+                      warmup=1, repeats=2,
+                      backends=("xla", "pallas", "pallas-gpu"))
+    tuned, stats = tune(spec, csf=csf, factors=factors, tuner=cfg)
+    assert tuned.backend in ("xla", "pallas", "pallas-gpu")
+    assert stats.candidates_timed >= 3
+
+    # forced pallas-gpu winner: persists to the cache, replays as a hit,
+    # and survives the plan JSON round trip onto its tuned backend
+    forced = TunerConfig(max_paths=2, max_candidates=2, orders_per_path=1,
+                         warmup=1, repeats=2, backends=("pallas-gpu",))
+    p1 = plan(spec, autotune=True, cache_dir=str(tmp_path), csf=csf,
+              factors=factors, tuner=forced)
+    assert p1.backend == "pallas-gpu" and not p1.stats.cache_hit
+    p2 = plan(spec, autotune=True, cache_dir=str(tmp_path), csf=csf,
+              factors=factors, tuner=forced)
+    assert p2.stats.cache_hit and p2.backend == "pallas-gpu"
+    assert p1 == p2
+    rt = plan_from_json(plan_to_json(p2))
+    assert rt == p2 and rt.backend == "pallas-gpu"
+    out = execute_plan(rt, CSFArrays.from_csf(csf), factors, block=8)
+    np.testing.assert_allclose(np.asarray(out), oracle, atol=1e-4)
+
+
+def test_gpu_backend_distinct_cache_key():
+    """A pallas-gpu search must never be served a pallas (TPU) cache
+    entry — the backend axis is part of the cache key."""
+    from repro.autotune import cache_key
+    spec, csf, _ = _mttkrp_inputs()
+    levels = csf.nnz_levels()
+    keys = {cache_key(spec, levels, "cpu:x", backends=bs)
+            for bs in (("pallas",), ("pallas-gpu",),
+                       ("xla", "pallas", "pallas-gpu"))}
+    assert len(keys) == 3

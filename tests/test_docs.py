@@ -25,6 +25,7 @@ MARKDOWN_WITH_DOCTESTS = [
     "docs/serving.md",
     "docs/out-of-core.md",
     "docs/analysis.md",
+    "docs/backends.md",
 ]
 
 # the public API surface whose docstrings carry runnable examples

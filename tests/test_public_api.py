@@ -130,7 +130,7 @@ def test_make_executor_rejects_unknown_kwargs():
     for valid in ("block", "strategy", "tile_align"):
         assert valid in msg
     # pallas-only kwargs on a non-pallas backend are rejected, not ignored
-    with pytest.raises(ValueError, match="pallas backend"):
+    with pytest.raises(ValueError, match="Pallas backends"):
         repro.make_executor(spec, p.path, p.order, backend="xla", block=8)
 
 
@@ -140,7 +140,7 @@ def test_execute_plan_rejects_unknown_kwargs():
     arrays = repro.CSFArrays.from_csf(csf)
     with pytest.raises(ValueError, match="unknown argument"):
         repro.execute_plan(p, arrays, factors, strategies="fused")
-    with pytest.raises(ValueError, match="pallas backend"):
+    with pytest.raises(ValueError, match="Pallas backends"):
         repro.execute_plan(p, arrays, factors, tile_align=True)  # xla plan
     # the happy path still happy after the rejections
     out = repro.execute_plan(p, arrays, factors)
